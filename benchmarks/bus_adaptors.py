@@ -1,0 +1,39 @@
+"""Paper Table 2 analogue: bus-virtualisation (layout adaptor) overhead.
+
+Measures the per-call cost of the adaptor layer for: identity (interface
+already matches — the "no adaptor instantiated" case), dtype cast, batch
+pad, and cast+pad; plus bytes moved per conversion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import bus
+
+
+def main() -> list[str]:
+    rows = []
+    want = (jax.ShapeDtypeStruct((256, 256), jnp.float32),)
+    cases = {
+        "identity": np.zeros((256, 256), np.float32),
+        "cast": np.zeros((256, 256), np.float64),
+        "pad": np.zeros((200, 256), np.float32),
+        "cast+pad": np.zeros((200, 200), np.float64),
+    }
+    for name, arr in cases.items():
+        def call(a=arr):
+            out, rep = bus.adapt_inputs((a,), want)
+            jax.block_until_ready(out)
+            return rep
+        t = timeit(call, iters=10)
+        rep = call()
+        rows.append(row(f"table2/adaptor/{name}", t * 1e6,
+                        f"bytes_moved={rep.bytes_moved}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Fig. 22 analogue: two mutually-unaware tenants under dynamic
+offload (mandelbrot ~ compute-bound, sobel ~ memory-bound).
+
+Grid over exposed parallelism (n_mandel x n_sobel in 1..3), relative
+latency vs the 1x1 scenario, via the calibrated simulator on a 3-slot
+shell (the paper's Ultra-96).  Derived figure: improvement of the best
+greedy configuration over 1x1 (paper reports 46%).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import ImplAlt, ModuleDescriptor, PolicyConfig, Registry, \
+    SimJob, simulate
+
+
+MANDEL_FRAME_MS = 36.0          # compute-bound: total work per frame
+SOBEL_FRAME_MS = 18.0           # memory-bound
+OVERHEAD_MS = 1.5               # per-chunk fetch/writeback
+MEM_PENALTY = 1.25              # sobel replication pollutes DRAM rows
+
+
+def _registry(nm: int, ns: int) -> Registry:
+    """Fixed work per frame split into n chunks (paper programming model):
+    each chunk costs frame/n + per-chunk overhead; sobel chunks slow down
+    when replicated (row pollution, paper 5.5.2)."""
+    reg = Registry()
+    reg.register_module(ModuleDescriptor(
+        name="mandelbrot", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, MANDEL_FRAME_MS / nm + OVERHEAD_MS),)))
+    sobel_chunk = SOBEL_FRAME_MS / ns + OVERHEAD_MS
+    if ns > 1:
+        sobel_chunk *= MEM_PENALTY
+    reg.register_module(ModuleDescriptor(
+        name="sobel", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, sobel_chunk),)))
+    return reg
+
+
+def main() -> list[str]:
+    rows = []
+    lat: dict[tuple[int, int], float] = {}
+    for nm in (1, 2, 3):
+        for ns in (1, 2, 3):
+            jobs = [SimJob(0.0, "mandel_user", "mandelbrot", nm),
+                    SimJob(0.0, "sobel_user", "sobel", ns)]
+            r = simulate(_registry(nm, ns), 3, jobs,
+                         PolicyConfig(reconfig_penalty_ms=2.0))
+            lat[(nm, ns)] = r.makespan
+    base = lat[(1, 1)]
+    for (nm, ns), t in sorted(lat.items()):
+        rows.append(row(f"fig22/{nm}mandel_x_{ns}sobel", t * 1e3,
+                        f"rel={t / base:.3f}"))
+    best = min(lat.values())
+    rows.append(row("fig22/best_vs_1x1", 0.0,
+                    f"improvement={(1 - best / base) * 100:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

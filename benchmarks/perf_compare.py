@@ -1,0 +1,71 @@
+"""Compare dry-run artifact variants (baseline vs tagged runs) for the
+EXPERIMENTS.md section-4 iteration log.
+
+    python -m benchmarks.perf_compare qwen3-14b train_4k opt1 [opt2 ...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.common import REPO
+
+ART = REPO / "benchmarks" / "artifacts" / "dryrun" / "single"
+
+
+def load(arch: str, shape: str, tag: str) -> dict:
+    name = f"{shape}.json" if tag == "baseline" else f"{shape}__{tag}.json"
+    return json.loads((ART / arch / name).read_text())
+
+
+def describe(d: dict) -> dict:
+    r = d.get("roofline", {})
+    mem = d.get("full", {}).get("memory", {})
+    per_dev = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)
+               - mem.get("alias_size_in_bytes", 0))
+    return {
+        "compute_ms": r.get("compute_s", 0) * 1e3,
+        "memory_ms": r.get("memory_s", 0) * 1e3,
+        "collective_ms": r.get("collective_s", 0) * 1e3,
+        "dominant": r.get("dominant"),
+        "roofline_frac": r.get("roofline_fraction"),
+        "useful": r.get("useful_flops_ratio"),
+        "hbm_gib": per_dev / 1024 ** 3,
+    }
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    tags = ["baseline"] + sys.argv[3:]
+    rows = {t: describe(load(arch, shape, t)) for t in tags}
+    keys = ["compute_ms", "memory_ms", "collective_ms", "dominant",
+            "roofline_frac", "useful", "hbm_gib"]
+    print(f"{'metric':<16}" + "".join(f"{t:>16}" for t in tags))
+    for k in keys:
+        vals = []
+        for t in tags:
+            v = rows[t][k]
+            vals.append(f"{v:>16.3f}" if isinstance(v, float)
+                        else f"{str(v):>16}")
+        print(f"{k:<16}" + "".join(vals))
+    # top per-op deltas if available
+    for t in tags[1:]:
+        b_ops = load(arch, shape, "baseline").get(
+            "extrapolated", {}).get("g2", {}).get("by_op")
+        t_ops = load(arch, shape, t).get(
+            "extrapolated", {}).get("g2", {}).get("by_op")
+        if b_ops and t_ops:
+            print(f"\n-- per-op g2 bytes: baseline -> {t} (GiB)")
+            ops = sorted(set(b_ops) | set(t_ops),
+                         key=lambda o: -(b_ops.get(o, {}).get("bytes", 0)))
+            for o in ops[:10]:
+                b = b_ops.get(o, {}).get("bytes", 0) / 1024 ** 3
+                n = t_ops.get(o, {}).get("bytes", 0) / 1024 ** 3
+                print(f"  {o:<22} {b:>9.2f} -> {n:>9.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Roofline report (Figs 17/18 + the perf deliverable): reads the dry-run
+artifacts and emits per-(arch x shape) roofline terms for the single-pod
+mesh.  `python -m benchmarks.roofline --markdown` renders the EXPERIMENTS.md
+table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import REPO, row
+
+ART = REPO / "benchmarks" / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "single", tag: str | None = None) -> list[dict]:
+    cells = []
+    for p in sorted((ART / mesh).glob("*/*.json")):
+        if tag in (None, "baseline") and "__" in p.name:
+            continue            # tagged variant files
+        if tag not in (None, "baseline") and not p.name.endswith(
+                f"__{tag}.json"):
+            continue
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def terms_of(d: dict):
+    """Re-derive roofline terms from a stored artifact with the CURRENT
+    roofline model (kernel adjustment etc. are analytic — no recompile)."""
+    from repro import configs
+    from repro.configs.common import apply_cell_policy
+    from repro.launch import roofline_model
+    from repro.models.api import SHAPE_CELLS
+    e = d["extrapolated"]
+    cell = SHAPE_CELLS[d["cell"]]
+    cfg = apply_cell_policy(configs.get(d["arch"]), cell)
+    return roofline_model.terms_from_costs(
+        e["flops_per_device"], e["bytes_per_device"],
+        e["coll_bytes_per_device"], d["chips"], cfg, cell)
+
+
+def main() -> list[str]:
+    rows = []
+    for d in load_cells("single"):
+        name = f"roofline/{d['arch']}/{d['cell']}"
+        if "skipped" in d:
+            rows.append(row(name, 0.0, "SKIP(full-attention)"))
+            continue
+        if "error" in d or "extrapolated" not in d:
+            rows.append(row(name, 0.0, f"ERROR:{d.get('error', '?')[:60]}"))
+            continue
+        t = terms_of(d)
+        rows.append(row(name, t.step_time_s * 1e6,
+                        f"dominant={t.dominant} "
+                        f"frac={t.roofline_fraction:.3f} "
+                        f"useful={t.useful_flops_ratio:.2f}"))
+    return rows
+
+
+def markdown(tag: str | None = None) -> str:
+    lines = [
+        "| arch | shape | compute (ms) | memory XLA-path (ms) | "
+        "memory kernel-adj (ms) | collective (ms) | dominant | MODEL_FLOPS "
+        "| useful ratio | roofline frac | fits HBM |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in load_cells("single", tag):
+        if "skipped" in d:
+            lines.append(f"| {d['arch']} | {d['cell']} | — | — | — | — | — "
+                         f"| — | — | — | SKIP(full-attention) |")
+            continue
+        if "error" in d or "extrapolated" not in d:
+            lines.append(f"| {d['arch']} | {d['cell']} | — | — | — | — | — "
+                         f"| — | — | — | ERROR |")
+            continue
+        t = terms_of(d)
+        mem = d["full"]["memory"]
+        per_dev = (mem["argument_size_in_bytes"]
+                   + mem["temp_size_in_bytes"]
+                   + mem["output_size_in_bytes"]
+                   - mem["alias_size_in_bytes"])
+        fits = "yes" if per_dev < 16 * 1024 ** 3 else \
+            f"NO ({per_dev / 1024**3:.1f} GiB)"
+        lines.append(
+            f"| {d['arch']} | {d['cell']} | {t.compute_s * 1e3:.2f} "
+            f"| {t.memory_s * 1e3:.2f} "
+            f"| {t.memory_kernel_adj_s * 1e3:.2f} "
+            f"| {t.collective_s * 1e3:.2f} | {t.dominant} "
+            f"| {t.model_flops_global:.3g} "
+            f"| {t.useful_flops_ratio:.2f} "
+            f"| {t.roofline_fraction:.3f} | {fits} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+    if args.markdown:
+        print(markdown(args.tag))
+    else:
+        main()

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+BENCHES = [
+    ("table1", "benchmarks.shell_overhead"),
+    ("table2", "benchmarks.bus_adaptors"),
+    ("table3", "benchmarks.compile_latency"),
+    ("table4", "benchmarks.runtime_overhead"),
+    ("table5", "benchmarks.modularity"),
+    ("fig15", "benchmarks.elastic_sim"),
+    ("fig19-21", "benchmarks.single_tenant"),
+    ("fig22", "benchmarks.multi_tenant"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    import importlib
+    print("name,us_per_call,derived")
+    failures = []
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for key, modname in BENCHES:
+        if only and only not in (key, modname):
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            mod.main()
+        except Exception:  # noqa: BLE001 - report all benches
+            traceback.print_exc()
+            failures.append(key)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

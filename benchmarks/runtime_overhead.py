@@ -1,0 +1,75 @@
+"""Paper Table 4 analogue: software-stack execution overheads.
+
+  - daemon init (once)            ~ paper "Initialize gRPC" 12.2 ms
+  - registry JSON parse (once)    ~ paper "JSON parsing"     2.27 ms
+  - submit -> dispatch            ~ paper "gRPC call"        0.71 ms
+  - scheduler decision            ~ paper "Scheduler"        0.02 ms
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import Daemon, Registry, Shell, default_registry, \
+    uniform_shell
+from repro.core.scheduler import PolicyConfig, SchedulerState
+
+
+def main() -> list[str]:
+    rows = []
+    # registry parse
+    import tempfile
+    reg = default_registry()
+    with tempfile.TemporaryDirectory() as d:
+        reg.save(d)
+        t = timeit(lambda: Registry.load(d), iters=20)
+    rows.append(row("table4/json_parse_once", t * 1e6, "registry load"))
+
+    # daemon init
+    spec = uniform_shell("host1_s1", (1, 1), 1)
+    t0 = time.perf_counter()
+    daemon = Daemon(Shell(spec), reg)
+    t_init = time.perf_counter() - t0
+    rows.append(row("table4/daemon_init_once", t_init * 1e6, "init"))
+
+    # submit -> daemon call overhead (excluding execution): measure submit()
+    re = np.zeros((256, 256), np.float32)
+    t = timeit(lambda: daemon.submit("bench", "mandelbrot",
+                                     [(re, re)]).future.result(300),
+               warmup=2, iters=5)
+    rows.append(row("table4/call_roundtrip", t * 1e6,
+                    "submit+sched+exec+result"))
+    t_sub = timeit(lambda: daemon.submit("bench2", "mandelbrot",
+                                         [(re, re)]), iters=5)
+    rows.append(row("table4/submit_only", t_sub * 1e6, "enqueue"))
+    time.sleep(2)
+
+    # scheduler decision latency (pure policy, no execution)
+    state = SchedulerState(8, reg, PolicyConfig())
+    for u in range(4):
+        state.submit(f"u{u}", "mandelbrot", 16)
+    t0 = time.perf_counter_ns()
+    n = 0
+    while True:
+        a = state.schedule()
+        if not a:
+            break
+        for x in a:
+            state.complete(x)
+        n += 1
+        if n > 200:
+            break
+    dt = (time.perf_counter_ns() - t0) / max(n, 1)
+    rows.append(row("table4/scheduler_decision", dt / 1e3,
+                    f"{n}_rounds"))
+    if daemon.stats["sched_calls"]:
+        us = daemon.stats["sched_ns"] / daemon.stats["sched_calls"] / 1e3
+        rows.append(row("table4/daemon_sched_observed", us, "per event"))
+    daemon.shutdown()
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper Table 1 analogue: shell resource overhead.
+
+On FPGA the shell burns 20-50% of fabric; on TPU the FOS-JAX shell is host
+software + geometry, so the figure of merit is slot *coverage* of the mesh
+(chips schedulable for accelerators) and shell bring-up latency.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row, timeit
+from repro.core.shell import production_shells, Shell, uniform_shell
+
+
+def main() -> list[str]:
+    rows = []
+    for name, spec in production_shells().items():
+        cover = spec.coverage()
+        rows.append(row(f"table1/coverage/{name}", 0.0,
+                        f"{cover:.3f}"))
+    # shell bring-up ("load shell") on the host: bind 1-device shell
+    spec = uniform_shell("host1_s1", (1, 1), 1)
+    t = timeit(lambda: Shell(spec), iters=10)
+    rows.append(row("table1/shell_bringup", t * 1e6, "host-bind"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""FOS core: the paper's primary contribution, adapted to TPU pods.
+
+- shell.py      shell/slot geometry (PR-region analogue)
+- allocator.py  buddy allocation with adjacent-slot merging
+- registry.py   JSON logical-hardware abstraction (shells + modules)
+- module.py     decoupled AOT compilation, relocation, weight loading
+- bus.py        layout adaptors (bus virtualisation analogue)
+- scheduler.py  resource-elastic space-time policy (replicate/replace/reuse)
+- simulator.py  discrete-event execution of the policy (tests + Fig 15)
+- daemon.py     live multi-tenant execution service
+- zoo.py        module builders (mandelbrot/sobel/matmul/LM)
+"""
+from repro.core.allocator import BuddyAllocator, Range
+from repro.core.daemon import Daemon
+from repro.core.registry import ImplAlt, ModuleDescriptor, Registry
+from repro.core.scheduler import PolicyConfig, SchedulerState
+from repro.core.shell import Shell, ShellSpec, SlotSpec, uniform_shell
+from repro.core.simulator import SimJob, simulate
+
+
+def default_registry() -> Registry:
+    """Registry preloaded with the benchmark accelerator zoo."""
+    reg = Registry()
+    from repro.core.shell import production_shells
+    for spec in production_shells().values():
+        reg.register_shell(spec)
+    reg.register_module(ModuleDescriptor(
+        name="mandelbrot", entrypoint="repro.core.zoo:build_mandelbrot",
+        impls=(ImplAlt("x1", 1, 12.0), ImplAlt("x2", 2, 6.5),
+               ImplAlt("x4", 4, 3.6)), kind="fn"))
+    reg.register_module(ModuleDescriptor(
+        name="sobel", entrypoint="repro.core.zoo:build_sobel",
+        impls=(ImplAlt("x1", 1, 6.0), ImplAlt("x2", 2, 3.4)), kind="fn"))
+    reg.register_module(ModuleDescriptor(
+        name="matmul", entrypoint="repro.core.zoo:build_matmul",
+        impls=(ImplAlt("x1", 1, 4.0), ImplAlt("x2", 2, 2.3)), kind="fn"))
+    reg.register_module(ModuleDescriptor(
+        name="lm-forward", entrypoint="repro.core.zoo:build_lm_forward",
+        impls=(ImplAlt("x1", 1, 20.0), ImplAlt("x2", 2, 11.0)), kind="fn"))
+    return reg

@@ -1,0 +1,76 @@
+"""Buddy allocator over shell slots.
+
+Implements the paper's "combine adjacent PR regions" capability: allocations
+are power-of-two runs of adjacent slots, aligned buddy-style so merges are
+always possible when both buddies are free.  O(slots) per operation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Range:
+    start: int
+    size: int
+
+    @property
+    def slots(self) -> tuple[int, ...]:
+        return tuple(range(self.start, self.start + self.size))
+
+
+class BuddyAllocator:
+    def __init__(self, n_slots: int):
+        assert n_slots >= 1
+        self.n = n_slots            # any count; allocations stay
+        self.busy: set[int] = set()  # power-of-two sized & size-aligned
+
+    # -- queries ------------------------------------------------------------
+
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.n) if i not in self.busy]
+
+    def can_alloc(self, size: int) -> bool:
+        return self.find(size) is not None
+
+    def largest_free(self) -> int:
+        size = 1
+        best = 0
+        while size <= self.n:
+            if self.find(size) is not None:
+                best = size
+            size *= 2
+        return best
+
+    def find(self, size: int) -> Range | None:
+        """Smallest-index aligned free run of `size` slots."""
+        assert size >= 1 and (size & (size - 1)) == 0
+        if size > self.n:
+            return None
+        for start in range(0, self.n - size + 1, size):
+            if all(i not in self.busy for i in range(start, start + size)):
+                return Range(start, size)
+        return None
+
+    # -- mutation -----------------------------------------------------------
+
+    def alloc(self, size: int) -> Range | None:
+        r = self.find(size)
+        if r is None:
+            return None
+        self.busy.update(r.slots)
+        return r
+
+    def alloc_at(self, r: Range) -> None:
+        assert all(i not in self.busy for i in r.slots), "double alloc"
+        assert r.start % r.size == 0, "unaligned"
+        self.busy.update(r.slots)
+
+    def free(self, r: Range) -> None:
+        for i in r.slots:
+            assert i in self.busy, f"double free of slot {i}"
+            self.busy.discard(i)
+
+    @property
+    def utilization(self) -> float:
+        return len(self.busy) / self.n

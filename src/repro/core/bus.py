@@ -1,0 +1,69 @@
+"""Layout adaptors — the bus-virtualisation analogue (paper section 4.1.2).
+
+A module's compiled interface fixes shapes/dtypes/shardings.  When a caller's
+arrays differ (dtype, batch padding, host layout), an adaptor is instantiated
+*only for that module* (the paper's "adaptor integrated into a module only if
+needed") translating caller data to the slot's expected form and back, and
+accounting the bytes it moves (Table-2 analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class AdaptorReport:
+    casts: int = 0
+    pads: int = 0
+    bytes_moved: int = 0
+    identity: bool = True
+
+
+def _leaf_bytes(x) -> int:
+    return int(np.prod(x.shape)) * x.dtype.itemsize
+
+
+def adapt_inputs(args: tuple, abstract_inputs: tuple
+                 ) -> tuple[tuple, AdaptorReport]:
+    """Coerce caller args to the module's abstract input signature."""
+    rep = AdaptorReport()
+    out = []
+    for given, want_tree in zip(args, abstract_inputs):
+        flat_g, treedef = jax.tree.flatten(given)
+        flat_w = jax.tree.leaves(want_tree)
+        new = []
+        for g, w in zip(flat_g, flat_w):
+            src_dtype = np.asarray(g).dtype if not hasattr(g, "dtype") \
+                else g.dtype
+            g = jnp.asarray(g)
+            if src_dtype != w.dtype or g.dtype != w.dtype:
+                g = g.astype(w.dtype)
+                rep.casts += 1
+                rep.identity = False
+                rep.bytes_moved += _leaf_bytes(g)
+            if g.shape != w.shape:
+                assert len(g.shape) == len(w.shape), (g.shape, w.shape)
+                assert all(gs <= ws for gs, ws in zip(g.shape, w.shape)), \
+                    f"input {g.shape} exceeds module interface {w.shape}"
+                pad = [(0, ws - gs) for gs, ws in zip(g.shape, w.shape)]
+                g = jnp.pad(g, pad)
+                rep.pads += 1
+                rep.identity = False
+                rep.bytes_moved += _leaf_bytes(g)
+            new.append(g)
+        out.append(jax.tree.unflatten(treedef, new))
+    return tuple(out), rep
+
+
+def strip_outputs(out, orig_batch: int | None):
+    """Undo batch padding on the way back (best-effort, dim 0)."""
+    if orig_batch is None:
+        return out
+    return jax.tree.map(
+        lambda x: x[:orig_batch] if hasattr(x, "shape") and x.ndim >= 1
+        else x, out)

@@ -1,0 +1,153 @@
+"""FOS daemon: multi-tenant acceleration service (paper section 4.4.1).
+
+The paper uses gRPC + shared memory; in this single-host container the
+daemon is in-process with a serialisable request boundary (a real RPC
+front-end bolts onto `submit` unchanged) and zero-copy array handoff.
+
+Execution model: a scheduler thread applies the resource-elastic policy on
+every event; each assignment runs on its slot through a worker pool (XLA
+dispatch is per-device-set, so distinct slots execute concurrently).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any
+
+import jax
+
+from repro.core import bus
+from repro.core.module import AccelModule, Placement, run_placement
+from repro.core.registry import Registry
+from repro.core.scheduler import Assignment, PolicyConfig, SchedulerState
+from repro.core.shell import Shell
+
+
+@dataclasses.dataclass
+class JobHandle:
+    rid: int
+    future: Future          # resolves to list of chunk outputs
+    t_submit: float
+
+
+class Daemon:
+    def __init__(self, shell: Shell, registry: Registry,
+                 policy: PolicyConfig | None = None, max_workers: int = 8):
+        self.shell = shell
+        self.registry = registry
+        self.state = SchedulerState(len(shell.slots), registry, policy)
+        self._modules: dict[str, AccelModule] = {}
+        self._placements: dict[tuple[int, int], Placement] = {}
+        self._events: queue.Queue = queue.Queue()
+        self._lock = threading.Lock()
+        self._results: dict[int, list] = {}
+        self._handles: dict[int, JobHandle] = {}
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self.stats = {"reconfigurations": 0, "reuses": 0, "chunks": 0,
+                      "sched_ns": 0, "sched_calls": 0}
+        self._thread.start()
+
+    # -- public API (paper Listings 4/5) --------------------------------------
+
+    def run(self, tenant: str, jobs: list[dict]) -> list[JobHandle]:
+        """jobs: [{"name": <module>, "chunks": [args...]}] -> handles."""
+        handles = []
+        for j in jobs:
+            handles.append(self.submit(tenant, j["name"], j["chunks"]))
+        return handles
+
+    def submit(self, tenant: str, module: str, chunks: list) -> JobHandle:
+        self.registry.module(module)   # validates
+        fut: Future = Future()
+        with self._lock:
+            req = self.state.submit(tenant, module, len(chunks),
+                                    payloads=list(chunks),
+                                    now=time.perf_counter())
+            self._results[req.rid] = [None] * len(chunks)
+            h = JobHandle(req.rid, fut, time.perf_counter())
+            self._handles[req.rid] = h
+        self._events.put(("submit", None))
+        return h
+
+    def shutdown(self):
+        self._stop.set()
+        self._events.put(("stop", None))
+        self._thread.join(timeout=10)
+        self._pool.shutdown(wait=True)
+
+    # -- module management -----------------------------------------------------
+
+    def _module(self, name: str) -> AccelModule:
+        if name not in self._modules:
+            desc = self.registry.module(name)
+            builder = desc.load_builder()
+            self._modules[name] = AccelModule(name, builder,
+                                              desc.footprints)
+        return self._modules[name]
+
+    def _placement(self, a: Assignment) -> Placement:
+        key = (a.rng.start, a.rng.size)
+        pl = self._placements.get(key)
+        if pl is not None and pl.module.name == a.module and not a.reconfigure:
+            self.stats["reuses"] += 1
+            return pl
+        mod = self._module(a.module)
+        slot = (self.shell.slots[a.rng.start] if a.rng.size == 1 else
+                self.shell.merged_slot(list(a.rng.slots)))
+        pl = mod.place(slot, a.footprint)
+        self._placements[key] = pl
+        self.stats["reconfigurations"] += 1
+        return pl
+
+    # -- event loop -------------------------------------------------------------
+
+    def _loop(self):
+        while not self._stop.is_set():
+            try:
+                self._events.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            # drain
+            try:
+                while True:
+                    self._events.get_nowait()
+            except queue.Empty:
+                pass
+            with self._lock:
+                t0 = time.perf_counter_ns()
+                assignments = self.state.schedule()
+                self.stats["sched_ns"] += time.perf_counter_ns() - t0
+                self.stats["sched_calls"] += 1
+            for a in assignments:
+                self._pool.submit(self._run_assignment, a)
+
+    def _run_assignment(self, a: Assignment):
+        try:
+            pl = self._placement(a)
+            req = self.state.requests[a.rid]
+            payload = req.payloads[a.chunk]
+            prog = pl.module.program(pl.slot, pl.footprint)
+            args, _ = bus.adapt_inputs(
+                payload if isinstance(payload, tuple) else (payload,),
+                prog.abstract_inputs)
+            out = run_placement(pl, *args)
+            err = None
+        except Exception as e:  # noqa: BLE001 - propagate to the future
+            out, err = None, e
+        with self._lock:
+            self.stats["chunks"] += 1
+            self.state.complete(a, now=time.perf_counter())
+            req = self.state.requests[a.rid]
+            if err is None:
+                self._results[a.rid][a.chunk] = out
+            h = self._handles[a.rid]
+            if err is not None and not h.future.done():
+                h.future.set_exception(err)
+            elif req.complete and not h.future.done():
+                h.future.set_result(self._results.pop(a.rid))
+        self._events.put(("done", None))

@@ -1,0 +1,144 @@
+"""AccelModule: an AOT-compiled program + weights, placeable into slots.
+
+FOS mapping:
+  - compile against a slot *interface* (shape + axes + abstract inputs), in
+    isolation from the shell instance -> decoupled compilation;
+  - placement into a congruent slot re-lowers against that slot's devices
+    with the XLA compilation cache warm -> relocation (BitMan analogue);
+  - weight transfer to the slot's devices = partial reconfiguration; the
+    scheduler skips it when the module is already resident (paper 4.4.3).
+
+A ModuleBuilder (referenced by the registry descriptor's entrypoint) returns
+a ModuleProgram describing fn / abstract inputs / shardings / weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.core.shell import Slot
+
+
+@dataclasses.dataclass
+class ModuleProgram:
+    """What a builder returns for a given footprint."""
+    fn: Callable                         # (weights, *chunk_args) -> outputs
+    abstract_weights: Any                # pytree of ShapeDtypeStruct
+    abstract_inputs: tuple               # chunk args, ShapeDtypeStructs
+    weight_pspecs: Any                   # PartitionSpec pytree (or None)
+    input_pspecs: tuple                  # PartitionSpec pytrees
+    output_pspecs: Any = None
+    init_weights: Callable | None = None  # key -> concrete weights (host)
+
+    def signature(self) -> dict:
+        def leaf(s):
+            return {"shape": list(s.shape), "dtype": str(s.dtype)}
+        return {
+            "inputs": jax.tree.map(leaf, list(self.abstract_inputs)),
+            "weights": jax.tree.map(leaf, self.abstract_weights),
+        }
+
+
+@dataclasses.dataclass
+class Placement:
+    """A module implementation resident in a slot."""
+    module: "AccelModule"
+    footprint: int
+    slot: Slot
+    executable: Any
+    weights_on_slot: Any
+    load_time_s: float
+    compile_time_s: float
+    cache_hit: bool
+
+
+class AccelModule:
+    """A named accelerator with implementation alternatives."""
+
+    def __init__(self, name: str, builder: Callable, footprints: list[int],
+                 weights_key: int = 0):
+        self.name = name
+        self.builder = builder
+        self.footprints = list(footprints)
+        self._programs: dict[tuple, ModuleProgram] = {}
+        self._host_weights: dict[int, Any] = {}
+        self._compile_count = 0
+        self._compile_keys: set[tuple] = set()
+        self.weights_key = weights_key
+
+    # -- decoupled compilation -------------------------------------------------
+
+    def program(self, slot: Slot, footprint: int) -> ModuleProgram:
+        key = (slot.congruence_key, footprint)
+        if key not in self._programs:
+            self._programs[key] = self.builder(slot.mesh, footprint)
+        return self._programs[key]
+
+    def host_weights(self, footprint: int):
+        if footprint not in self._host_weights:
+            prog = next(iter(self._programs.values()), None)
+            assert prog is not None, "compile before requesting weights"
+            if prog.init_weights is None:
+                self._host_weights[footprint] = None
+            else:
+                self._host_weights[footprint] = prog.init_weights(
+                    jax.random.PRNGKey(self.weights_key))
+        return self._host_weights[footprint]
+
+    def place(self, slot: Slot, footprint: int) -> Placement:
+        """Compile (cache-mediated) + load weights onto the slot."""
+        from jax.sharding import NamedSharding
+
+        prog = self.program(slot, footprint)
+        mesh = slot.mesh
+        in_sh = tuple(
+            jax.tree.map(lambda p: NamedSharding(mesh, p), ps)
+            for ps in prog.input_pspecs)
+        w_sh = (jax.tree.map(lambda p: NamedSharding(mesh, p),
+                             prog.weight_pspecs)
+                if prog.weight_pspecs is not None else None)
+        t0 = time.perf_counter()
+        args = (prog.abstract_weights, *prog.abstract_inputs)
+        shardings = (w_sh, *in_sh) if w_sh is not None else (None, *in_sh)
+        jitted = jax.jit(prog.fn, in_shardings=shardings)
+        lowered = jitted.lower(*args)
+        executable = lowered.compile()
+        t1 = time.perf_counter()
+        # congruence-class cache bookkeeping: a repeat compile of the same
+        # (program, congruence) is a relocation, not a fresh compile
+        ckey = (slot.congruence_key, footprint)
+        cache_hit = ckey in self._compile_keys
+        self._compile_keys.add(ckey)
+        self._compile_count += 1
+        # weight transfer = partial reconfiguration
+        hw = self.host_weights(footprint)
+        t2 = time.perf_counter()
+        if hw is not None and w_sh is not None:
+            w_dev = jax.device_put(hw, w_sh)
+            jax.block_until_ready(w_dev)
+        else:
+            w_dev = None
+        t3 = time.perf_counter()
+        return Placement(self, footprint, slot, executable, w_dev,
+                         load_time_s=t3 - t2, compile_time_s=t1 - t0,
+                         cache_hit=cache_hit)
+
+
+def run_placement(placement: Placement, *chunk_args):
+    """Generic driver: invoke a resident module on concrete inputs."""
+    from jax.sharding import NamedSharding
+
+    prog = placement.module.program(placement.slot, placement.footprint)
+    mesh = placement.slot.mesh
+    args = []
+    for a, ps in zip(chunk_args, prog.input_pspecs):
+        sh = jax.tree.map(lambda p: NamedSharding(mesh, p), ps)
+        args.append(jax.device_put(a, sh))
+    if placement.weights_on_slot is not None:
+        out = placement.executable(placement.weights_on_slot, *args)
+    else:
+        out = placement.executable(None, *args)
+    return jax.block_until_ready(out)

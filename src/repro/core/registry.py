@@ -1,0 +1,126 @@
+"""Logical hardware abstraction: JSON registry of shells and modules.
+
+Mirrors the paper's section 4.2: shells and accelerators are described by
+minimal JSON records; the runtime and 'generic drivers' (the daemon's invoke
+path) work from these descriptors alone, so shells and modules can be
+swapped without touching any other component.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+from pathlib import Path
+from typing import Any
+
+from repro.core.shell import ShellSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ImplAlt:
+    """One implementation alternative (paper: bitstreams of varying size)."""
+    name: str
+    footprint: int                 # slots occupied (power of two)
+    est_chunk_ms: float = 0.0      # scheduler cost model; refined online
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self):
+        return {"name": self.name, "footprint": self.footprint,
+                "est_chunk_ms": self.est_chunk_ms, "meta": self.meta}
+
+    @staticmethod
+    def from_json(d):
+        return ImplAlt(d["name"], d["footprint"],
+                       d.get("est_chunk_ms", 0.0), d.get("meta", {}))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleDescriptor:
+    """Paper Listing 2: accelerator descriptor.
+
+    `entrypoint` is an importable "pkg.mod:fn" returning a ModuleBuilder —
+    the analogue of the bitstream file reference.  `registers` (the ADR-map
+    analogue) is the module's abstract I/O signature, auto-filled at first
+    compile, which the daemon's generic driver uses to invoke any module
+    without module-specific host code.
+    """
+    name: str
+    entrypoint: str
+    impls: tuple[ImplAlt, ...]
+    kind: str = "fn"               # fn | decode | prefill | train
+    registers: dict = dataclasses.field(default_factory=dict)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self):
+        return {"name": self.name, "entrypoint": self.entrypoint,
+                "kind": self.kind,
+                "impls": [i.to_json() for i in self.impls],
+                "registers": self.registers, "meta": self.meta}
+
+    @staticmethod
+    def from_json(d):
+        return ModuleDescriptor(
+            d["name"], d["entrypoint"],
+            tuple(ImplAlt.from_json(i) for i in d["impls"]),
+            d.get("kind", "fn"), d.get("registers", {}), d.get("meta", {}))
+
+    def impl_for(self, footprint: int) -> ImplAlt | None:
+        for i in self.impls:
+            if i.footprint == footprint:
+                return i
+        return None
+
+    @property
+    def footprints(self) -> list[int]:
+        return sorted(i.footprint for i in self.impls)
+
+    def load_builder(self):
+        mod, _, fn = self.entrypoint.partition(":")
+        return getattr(importlib.import_module(mod), fn)
+
+
+class Registry:
+    """Central JSON-backed registry (paper: 'JSON based registry')."""
+
+    def __init__(self):
+        self.shells: dict[str, ShellSpec] = {}
+        self.modules: dict[str, ModuleDescriptor] = {}
+
+    # -- registration --------------------------------------------------------
+
+    def register_shell(self, spec: ShellSpec) -> None:
+        self.shells[spec.name] = spec
+
+    def register_module(self, desc: ModuleDescriptor) -> None:
+        self.modules[desc.name] = desc
+
+    def module(self, name: str) -> ModuleDescriptor:
+        if name not in self.modules:
+            raise KeyError(f"unknown module {name!r}; "
+                           f"registered: {sorted(self.modules)}")
+        return self.modules[name]
+
+    def shell(self, name: str) -> ShellSpec:
+        return self.shells[name]
+
+    # -- persistence ----------------------------------------------------------
+
+    def save(self, path: str | Path) -> None:
+        path = Path(path)
+        path.mkdir(parents=True, exist_ok=True)
+        (path / "shells.json").write_text(json.dumps(
+            {k: v.to_json() for k, v in self.shells.items()}, indent=2))
+        (path / "modules.json").write_text(json.dumps(
+            {k: v.to_json() for k, v in self.modules.items()}, indent=2))
+
+    @staticmethod
+    def load(path: str | Path) -> "Registry":
+        path = Path(path)
+        reg = Registry()
+        shells = json.loads((path / "shells.json").read_text())
+        modules = json.loads((path / "modules.json").read_text())
+        for v in shells.values():
+            reg.register_shell(ShellSpec.from_json(v))
+        for v in modules.values():
+            reg.register_module(ModuleDescriptor.from_json(v))
+        return reg

@@ -1,0 +1,220 @@
+"""Resource-elastic space-time scheduler (paper section 4.4).
+
+Pure policy core, shared by the discrete-event simulator (tests, Fig-15
+benchmark) and the live daemon executor:
+
+  - round-robin between tenants at acceleration-request granularity;
+  - each request carries independent data-parallel *chunks* (work-groups);
+  - module REPLICATION: chunks of one request run on many slots;
+  - module REPLACEMENT: when adjacent slots are free, a bigger
+    implementation alternative is placed on the merged range;
+  - REUSE: a range still hosting the right module skips reconfiguration;
+  - cooperative run-to-completion at chunk granularity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Any, Optional
+
+from repro.core.allocator import BuddyAllocator, Range
+from repro.core.registry import ModuleDescriptor
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tenant: str
+    module: str
+    n_chunks: int
+    payloads: list | None = None          # live mode: per-chunk args
+    issued: int = 0                       # chunks handed to slots
+    done: int = 0
+    t_submit: float = 0.0
+    t_finish: float | None = None
+
+    @property
+    def pending(self) -> int:
+        return self.n_chunks - self.issued
+
+    @property
+    def outstanding(self) -> int:
+        return self.issued - self.done
+
+    @property
+    def complete(self) -> bool:
+        return self.done >= self.n_chunks
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    rid: int
+    chunk: int
+    module: str
+    footprint: int
+    rng: Range
+    reconfigure: bool                     # False -> reused resident module
+
+
+@dataclasses.dataclass
+class PolicyConfig:
+    # prefer the largest implementation alternative when the system is
+    # otherwise idle (paper: "attempts to use the biggest module")
+    upsize_when_idle: bool = True
+    # estimated reconfiguration cost relative to a chunk (cost model)
+    reconfig_penalty_ms: float = 5.0
+    elastic: bool = True                  # False -> fixed 1-slot scheduling
+
+
+class SchedulerState:
+    def __init__(self, n_slots: int, registry, policy: PolicyConfig | None = None):
+        self.alloc = BuddyAllocator(n_slots)
+        self.registry = registry
+        self.policy = policy or PolicyConfig()
+        self.queues: dict[str, deque[Request]] = {}
+        # least-recently-served round robin: new tenants get priority
+        self._served_at: dict[str, int] = {}
+        self._serve_seq = 0
+        self.resident: dict[tuple[int, int], tuple[str, int]] = {}
+        #        (start, size) -> (module, footprint) for idle ranges too
+        self.requests: dict[int, Request] = {}
+        self._rid = itertools.count()
+
+    # -- queue management -----------------------------------------------------
+
+    def submit(self, tenant: str, module: str, n_chunks: int,
+               payloads=None, now: float = 0.0) -> Request:
+        rid = next(self._rid)
+        req = Request(rid, tenant, module, n_chunks, payloads,
+                      t_submit=now)
+        self.requests[rid] = req
+        if tenant not in self.queues:
+            self.queues[tenant] = deque()
+            self._served_at.setdefault(tenant, -1)
+        self.queues[tenant].append(req)
+        return req
+
+    def _eligible(self, req: Request) -> bool:
+        if req.pending <= 0:
+            return False
+        # fixed-module scheduling (paper Fig 15a): one module instance per
+        # task, chunks strictly sequential -> no replication
+        if not self.policy.elastic and req.outstanding > 0:
+            return False
+        return True
+
+    def _tenants_pending(self) -> list[str]:
+        return [t for t, q in self.queues.items()
+                if q and self._eligible(q[0])]
+
+    def _next_request(self) -> Optional[Request]:
+        """Round-robin across tenants at request granularity (paper Fig 14):
+        the least-recently-served pending tenant goes next."""
+        pending = self._tenants_pending()
+        if not pending:
+            return None
+        t = min(pending, key=lambda t: self._served_at[t])
+        return self.queues[t][0]
+
+    def _advance_rr(self, tenant: str) -> None:
+        self._served_at[tenant] = self._serve_seq
+        self._serve_seq += 1
+
+    # -- placement decision -----------------------------------------------------
+
+    def _n_free_ranges(self, size: int) -> int:
+        n = 0
+        for start in range(0, self.alloc.n, size):
+            if all(i not in self.alloc.busy
+                   for i in range(start, start + size)):
+                n += 1
+        return n
+
+    def _choose(self, req: Request) -> tuple[int, Range, bool] | None:
+        """Cost-model choice of implementation alternative + range.
+
+        Rate model: serving min(pending, n_free_ranges(fp)) chunks
+        concurrently, each costing est_chunk_ms (+ reconfig penalty unless a
+        free range already hosts this module at that footprint).  Pick the
+        max-rate option; ties prefer reuse, then the bigger alternative
+        (paper: biggest module assumed Pareto-optimal).  elastic=False
+        pins everything to the smallest footprint with no replacement.
+        """
+        desc = self.registry.module(req.module)
+        fps = [f for f in desc.footprints if self.alloc.can_alloc(f)]
+        if not self.policy.elastic:
+            fps = [f for f in fps if f == min(desc.footprints)]
+        if not fps:
+            return None
+        multi_tenant = len(self._tenants_pending()) > 1
+        if multi_tenant or not self.policy.upsize_when_idle:
+            # fairness first: smallest footprint, but still reuse if free
+            fps = [min(fps)]
+
+        def free_reuse_range(fp: int) -> Range | None:
+            for (start, size), (m, f) in self.resident.items():
+                if m == req.module and f == fp and size == fp:
+                    r = Range(start, size)
+                    if all(i not in self.alloc.busy for i in r.slots):
+                        return r
+            return None
+
+        best = None  # (rate, reuse, fp, range, reconfigure)
+        for fp in fps:
+            impl = desc.impl_for(fp)
+            reuse = free_reuse_range(fp)
+            n_avail = self._n_free_ranges(fp)
+            conc = max(1, min(req.pending, n_avail))
+            if reuse is not None:
+                t = impl.est_chunk_ms
+                cand = (conc / max(t, 1e-9), 1, fp, reuse, False)
+            else:
+                r = self.alloc.find(fp)
+                if r is None:
+                    continue
+                prev = self.resident.get((r.start, r.size))
+                reconf = prev != (req.module, fp)
+                t = impl.est_chunk_ms + (
+                    self.policy.reconfig_penalty_ms if reconf else 0.0)
+                cand = (conc / max(t, 1e-9), 0, fp, r, reconf)
+            if best is None or (cand[0], cand[1], cand[2]) > \
+                    (best[0], best[1], best[2]):
+                best = cand
+        if best is None:
+            return None
+        return best[2], best[3], best[4]
+
+    def schedule(self) -> list[Assignment]:
+        """Fill free slots with chunks; called on every event."""
+        out = []
+        while True:
+            req = self._next_request()
+            if req is None:
+                break
+            choice = self._choose(req)
+            if choice is None:
+                break
+            fp, rng, reconf = choice
+            self.alloc.alloc_at(rng)
+            # evict overlapped stale residents, then record the new one
+            for key in [k for k in self.resident
+                        if not (k[0] + k[1] <= rng.start
+                                or rng.start + rng.size <= k[0])]:
+                del self.resident[key]
+            self.resident[(rng.start, rng.size)] = (req.module, fp)
+            out.append(Assignment(req.rid, req.issued, req.module, fp,
+                                  rng, reconf))
+            req.issued += 1
+            self._advance_rr(req.tenant)
+        return out
+
+    def complete(self, a: Assignment, now: float = 0.0) -> None:
+        self.alloc.free(a.rng)
+        req = self.requests[a.rid]
+        req.done += 1
+        if req.complete:
+            req.t_finish = now
+            q = self.queues[req.tenant]
+            if q and q[0].rid == a.rid:
+                q.popleft()

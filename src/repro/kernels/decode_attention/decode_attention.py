@@ -1,0 +1,102 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+Decode is HBM-bandwidth-bound (the whole cache is read once per token); the
+kernel streams KV blocks through VMEM with a running online-softmax merge —
+no [S] score vector ever round-trips to HBM.
+
+  grid = (batch, q_heads, S/bk); kv-block dim sequential with VMEM scratch
+  (acc, m, l).  GQA native via index_map head folding.  The valid cache
+  length arrives as a scalar-prefetch argument; blocks entirely past
+  `length` are skipped (saves bandwidth when the cache is partly filled).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(length_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, block_k: int, kv_blocks: int):
+    ki = pl.program_id(2)
+    length = length_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(ki * block_k < length)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)                   # [1, hd]
+        k = k_ref[0, 0].astype(jnp.float32)                   # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)               # [1, bk]
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_bhd(q, k, v, length, *, scale: float,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = False):
+    """q: [B, Hq, hd]; k, v: [B, Hkv, S, hd]; length: scalar int32 (number
+    of valid cache positions).  Returns [B, Hq, hd]."""
+    b, hq, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0 and sk % block_k == 0, (hq, hkv, sk, block_k)
+    g = hq // hkv
+    q = (q * scale)[:, :, None, :]                            # [B,Hq,1,hd]
+    grid = (b, hq, sk // block_k)
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               kv_blocks=sk // block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, hd),
+                             lambda bi, hi, ki, length: (bi, hi, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda bi, hi, ki, length: (bi, hi // g, ki, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda bi, hi, ki, length: (bi, hi // g, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, 1, hd), lambda bi, hi, ki, length: (bi, hi, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, hd), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(length, jnp.int32)[None], q, k, v)
+    return out[:, :, 0, :]

@@ -1,0 +1,32 @@
+"""Jit-ready wrapper for the flash-decode kernel.
+
+Model-facing layout: q [B, Hq, hd], caches [B, S, Hkv, hd] (the layout the
+decode cache uses for cheap dynamic_update_slice).  On real TPU the cache
+would be kept [B, Hkv, S, hd] to avoid the transpose; see DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention as knl
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, length, *, scale: float,
+                     block_k: int = 512, interpret: bool = False):
+    """q: [B,Hq,hd]; caches [B,S,Hkv,hd]; length: valid prefix length.
+    Returns [B,Hq,hd]."""
+    sk = k_cache.shape[1]
+    block_k = min(block_k, max(128, 1 << (sk - 1).bit_length()))
+    pk = (-sk) % block_k
+    kt = jnp.transpose(k_cache, (0, 2, 1, 3)).astype(q.dtype)
+    vt = jnp.transpose(v_cache, (0, 2, 1, 3)).astype(q.dtype)
+    if pk:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    return knl.decode_attention_bhd(q, kt, vt, length, scale=scale,
+                                    block_k=block_k, interpret=interpret)

@@ -1,0 +1,2 @@
+"""Oracle for flash-decode (re-exported from flash_attention.ref)."""
+from repro.kernels.flash_attention.ref import decode_attention_ref  # noqa: F401

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for causal GQA attention ([B, S, H, hd] layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  scale: float | None = None):
+    """q: [B,Sq,Hq,hd]; k,v: [B,Sk,Hkv,hd] -> [B,Sq,Hq,hd] (q.dtype)."""
+    b, sq, hq, hd = q.shape
+    hkv, sk = k.shape[2], k.shape[1]
+    g = hq // hkv
+    scale = hd ** -0.5 if scale is None else scale
+    kr = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr) * scale
+    if causal:
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, length, *, scale: float):
+    """q: [B,Hq,hd]; k,v: [B,S,Hkv,hd]; length: #valid -> [B,Hq,hd]."""
+    b, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    kr = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kr) * scale
+    s = jnp.where(jnp.arange(sk)[None, None, :] < length, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, vr).astype(q.dtype)

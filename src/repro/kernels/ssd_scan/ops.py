@@ -1,0 +1,41 @@
+"""Jit-ready entry point for the SSD chunked scan.
+
+impl:
+  "xla"              - pure-jnp chunked algorithm (ref), XLA-fused
+  "pallas"           - Pallas TPU kernel
+  "pallas_interpret" - Pallas kernel in interpret mode (CPU-validatable)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import ref as ssd_ref_mod
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(x, dt, a, b, c, *, chunk: int = 128, impl: str = "xla",
+        initial_state=None):
+    """See ssd_scan.ref.ssd_ref for shapes. Returns (y, final_state)."""
+    seqlen = x.shape[1]
+    pad = (-seqlen) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 => identity step
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if impl == "xla":
+        y, final = ssd_ref_mod.ssd_ref(x, dt, a, b, c, chunk=chunk,
+                                       initial_state=initial_state)
+    elif impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.ssd_scan import ssd_scan as knl
+        y, final = knl.ssd_pallas(x, dt, a, b, c, chunk=chunk,
+                                  initial_state=initial_state,
+                                  interpret=(impl == "pallas_interpret"))
+    else:
+        raise ValueError(f"unknown ssd impl {impl!r}")
+    if pad:
+        y = y[:, :seqlen]
+    return y, final

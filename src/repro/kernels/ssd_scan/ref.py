@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked scan.
+
+Semantics (per batch b, head h; P = headdim, N = d_state):
+    h_t = exp(dt_t * a_h) * h_{t-1} + dt_t * B_t (x) x_t     (outer product)
+    y_t = C_t . h_t
+with B_t, C_t shared across the heads of a group (G groups, G | H).
+
+Chunked evaluation (chunk length Q):
+    within-chunk quadratic term + cross-chunk state recurrence.
+All accumulation in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _repeat_groups(t: jax.Array, n_heads: int) -> jax.Array:
+    """[B, L, G, N] -> [B, L, H, N]."""
+    g = t.shape[2]
+    assert n_heads % g == 0
+    return jnp.repeat(t, n_heads // g, axis=2)
+
+
+def ssd_ref(x, dt, a, b, c, chunk: int = 128, initial_state=None):
+    """x: [B,L,H,P]; dt: [B,L,H] (post-softplus); a: [H] (negative);
+    b, c: [B,L,G,N].  Returns (y [B,L,H,P] f32, final_state [B,H,P,N] f32).
+    """
+    bsz, seqlen, n_heads, p = x.shape
+    n = b.shape[-1]
+    assert seqlen % chunk == 0, (seqlen, chunk)
+    nc, q = seqlen // chunk, chunk
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, q, n_heads, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, q, n_heads)
+    bh = _repeat_groups(b.astype(jnp.float32), n_heads).reshape(
+        bsz, nc, q, n_heads, n)
+    ch = _repeat_groups(c.astype(jnp.float32), n_heads).reshape(
+        bsz, nc, q, n_heads, n)
+
+    adt = dtf * a.astype(jnp.float32)[None, None, None, :]      # [B,NC,Q,H]
+    cum = jnp.cumsum(adt, axis=2)                               # inclusive
+    # within-chunk decay matrix  L[q,k] = exp(cum_q - cum_k),  k <= q
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # [B,NC,Q,K,H]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    lmat = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+    # diagonal (within-chunk) output
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", ch, bh) * lmat
+    scores = scores * dtf[:, :, None, :, :]                     # weight by dt_k
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xf)
+    # per-chunk end states:  sum_k exp(cum_Q - cum_k) dt_k B_k (x) x_k
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)                # [B,NC,Q,H]
+    s_c = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", decay_end * dtf, bh, xf)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # [B,NC,H]
+
+    # cross-chunk first-order recurrence via associative_scan (log-depth,
+    # loop-free: preferred on TPU and exactly counted by HLO cost analysis)
+    def combine(lhs, rhs):
+        dl, sl = lhs
+        dr, sr = rhs
+        return dl * dr, sl * dr[..., None, None] + sr
+
+    decays, states = jax.lax.associative_scan(
+        combine, (chunk_decay, s_c), axis=1)                    # inclusive
+    if initial_state is not None:
+        init = initial_state.astype(jnp.float32)
+        states = states + decays[..., None, None] * init[:, None]
+    else:
+        init = jnp.zeros((bsz, n_heads, p, n), jnp.float32)
+    final = states[:, -1]
+    s_prevs = jnp.concatenate(
+        [init[:, None], states[:, :-1]], axis=1)                # [B,NC,H,P,N]
+    # cross-chunk contribution:  C_q . (exp(cum_q) S_prev)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", ch, s_prevs, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(bsz, seqlen, n_heads, p)
+    return y, final

@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (XLA_FLAGS must be set before jax initialises devices)
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro import configs
+from repro.configs.common import apply_cell_policy
+from repro.launch import mesh as mesh_mod, roofline_model, steps
+from repro.models import api
+from repro.models.api import SHAPE_CELLS
+from repro.sharding import hlo_analysis, partition
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "artifacts" / "dryrun"
+
+FULL_ATTENTION_SKIP = "SKIP(full-attention): long_500k requires " \
+    "sub-quadratic attention (see DESIGN.md)"
+
+
+def cell_applicable(cfg, cell) -> bool:
+    if cell.name == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def scale_groups(cfg, groups: int):
+    """Config with `groups` layer-groups, all loops unrolled, for the cost
+    extrapolation compiles (HLO cost analysis counts while-loop bodies once,
+    so the roofline numbers come from unrolled g=1/g=2 compiles)."""
+    _, plan = cfg.layer_plan()
+    period = len(plan)
+    upd = dict(n_layers=groups * period, scan_layers=False, loss_chunk=0,
+               attn_unroll=True)
+    if cfg.family == "encdec":
+        upd["n_enc_layers"] = groups
+    return dataclasses.replace(cfg, **upd)
+
+
+def lower_and_compile(cfg, cell, mesh, rules, *, verbose=True):
+    """Returns (compiled, info dict)."""
+    step = steps.step_for_cell(cfg, cell, mesh, rules)
+    shardings = steps.cell_shardings(cfg, cell, mesh, rules)
+    in_sh, out_sh, donate = shardings
+    args = steps.abstract_inputs(cfg, cell)
+    t0 = time.perf_counter()
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+    t2 = time.perf_counter()
+    info = {
+        "lower_s": t1 - t0,
+        "compile_s": t2 - t1,
+        "memory": hlo_analysis.memory_stats_dict(compiled),
+        "cost": hlo_analysis.cost_analysis_dict(compiled),
+    }
+    if verbose:
+        print(f"    memory_analysis: {compiled.memory_analysis()}")
+        ca = info["cost"]
+        print(f"    cost_analysis: flops={ca.get('flops', 0):.4g} "
+              f"bytes={ca.get('bytes accessed', 0):.4g}")
+    return compiled, info
+
+
+def run_cell(arch: str, cell_name: str, *, multi_pod: bool,
+             cost_extrapolate: bool = True, rule_overrides=None,
+             tag: str = "", cfg_overrides: dict | None = None) -> dict:
+    cell = SHAPE_CELLS[cell_name]
+    base_cfg = configs.get(arch)
+    if not cell_applicable(base_cfg, cell):
+        return {"arch": arch, "cell": cell_name,
+                "mesh": "multi" if multi_pod else "single",
+                "skipped": FULL_ATTENTION_SKIP}
+    cfg = apply_cell_policy(base_cfg, cell)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **{k: v for k, v in
+                                          cfg_overrides.items()
+                                          if k != "train_rules"})
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    kind = "train" if cell.kind == "train" else "serve"
+    if kind == "train" and (cfg_overrides or {}).get(
+            "train_rules") == "train_fsdp":
+        kind = "train_fsdp"
+    overrides = dict(rule_overrides or {})
+    if cell.kind != "train" and cell.global_batch < 16:
+        # batch too small to shard over "data" (e.g. long_500k b=1):
+        # replicate batch, spread the cache sequence over data AND model
+        overrides.setdefault("batch", None)
+        overrides.setdefault(
+            "seq_kv", ("pod", "data", "model") if multi_pod
+            else ("data", "model"))
+    rules = partition.make_rules(kind, multi_pod=multi_pod,
+                                 overrides=overrides)
+
+    result = {"arch": arch, "cell": cell_name,
+              "mesh": "multi" if multi_pod else "single", "chips": chips,
+              "tag": tag}
+    print(f"[dryrun] {arch} x {cell_name} x "
+          f"{'multi' if multi_pod else 'single'}-pod ({chips} chips)")
+    compiled, info = lower_and_compile(cfg, cell, mesh, rules)
+    result["full"] = info
+
+    if cost_extrapolate:
+        # two small UNROLLED compiles; while-loop bodies are counted once by
+        # HLO cost analysis, so the scanned compile undercounts -- unrolled
+        # g=1/g=2 compiles give exact per-layer-group slopes.
+        n_groups, _ = cfg.layer_plan()
+        samples = {}
+        for g in (1, 2):
+            gcfg = scale_groups(cfg, g)
+            cmp_g, info_g = lower_and_compile(gcfg, cell, mesh, rules,
+                                              verbose=False)
+            hlo = cmp_g.as_text()
+            samples[g] = {
+                "cost": info_g["cost"],
+                "coll": hlo_analysis.collective_bytes(hlo),
+                "hbm_model": hlo_analysis.hbm_model_bytes(hlo),
+                "by_op": hlo_analysis.bytes_by_op(hlo),
+            }
+            del cmp_g
+        f1 = samples[1]["cost"].get("flops", 0.0)
+        f2 = samples[2]["cost"].get("flops", 0.0)
+        b1 = samples[1]["hbm_model"]
+        b2 = samples[2]["hbm_model"]
+        raw_b1 = samples[1]["cost"].get("bytes accessed", 0.0)
+        raw_b2 = samples[2]["cost"].get("bytes accessed", 0.0)
+        c1 = samples[1]["coll"]["total"]
+        c2 = samples[2]["coll"]["total"]
+        # negative slopes can appear when XLA optimises the two small
+        # compiles differently; clamp to the measured g-samples
+        flops_dev = max(f1 + (f2 - f1) * (n_groups - 1), f1, f2)
+        bytes_dev = max(b1 + (b2 - b1) * (n_groups - 1), b1, b2)
+        raw_bytes_dev = max(raw_b1 + (raw_b2 - raw_b1) * (n_groups - 1),
+                            raw_b1, raw_b2)
+        coll_dev = max(c1 + (c2 - c1) * (n_groups - 1), c1, c2)
+        result["extrapolated"] = {
+            "n_groups": n_groups,
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "raw_bytes_per_device": raw_bytes_dev,
+            "coll_bytes_per_device": coll_dev,
+            "g1": samples[1], "g2": samples[2],
+        }
+        terms = roofline_model.terms_from_costs(
+            flops_dev, bytes_dev, coll_dev, chips, cfg, cell)
+        result["roofline"] = terms.to_dict()
+        print(f"    roofline: compute={terms.compute_s * 1e3:.2f}ms "
+              f"memory={terms.memory_s * 1e3:.2f}ms "
+              f"collective={terms.collective_s * 1e3:.2f}ms "
+              f"dominant={terms.dominant} "
+              f"frac={terms.roofline_fraction:.3f}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--no-cost", action="store_true",
+                    help="skip the cost-extrapolation compiles")
+    ap.add_argument("--out", default=str(ARTIFACT_DIR))
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--kv-f8", action="store_true",
+                    help="store KV caches in float8_e4m3 (beyond-paper)")
+    ap.add_argument("--remat", default=None, choices=["none", "full",
+                                                      "dots"])
+    ap.add_argument("--train-rules", default="train",
+                    choices=["train", "train_fsdp"])
+    args = ap.parse_args()
+    cfg_overrides: dict = {}
+    if args.kv_f8:
+        import jax.numpy as jnp
+        cfg_overrides["kv_dtype"] = jnp.float8_e4m3fn
+    if args.remat:
+        cfg_overrides["remat"] = args.remat
+    if args.train_rules != "train":
+        cfg_overrides["train_rules"] = args.train_rules
+
+    archs = configs.ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = (list(SHAPE_CELLS) if args.shape == "all"
+              else args.shape.split(","))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    outdir = Path(args.out)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for multi_pod in meshes:
+                mesh_name = "multi" if multi_pod else "single"
+                fname = (f"{shape}.json" if args.tag == "baseline"
+                         else f"{shape}__{args.tag}.json")
+                path = outdir / mesh_name / arch / fname
+                path.parent.mkdir(parents=True, exist_ok=True)
+                try:
+                    res = run_cell(
+                        arch, shape, multi_pod=multi_pod,
+                        cost_extrapolate=(not args.no_cost and not multi_pod),
+                        tag=args.tag, cfg_overrides=cfg_overrides or None)
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    traceback.print_exc()
+                    res = {"arch": arch, "cell": shape, "mesh": mesh_name,
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures.append((arch, shape, mesh_name))
+                res["tag"] = args.tag
+                path.write_text(json.dumps(res, indent=2))
+    if failures:
+        print(f"FAILURES ({len(failures)}): {failures}")
+        raise SystemExit(1)
+    print("dry-run complete: all cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+make_production_mesh is a FUNCTION (not a module-level constant) so importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_slot_mesh(devices, shape, axes=("data", "model")):
+    """Mesh over an explicit device subset (a FOS slot)."""
+    import numpy as np
+    devs = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist on this host, as a 1-D ("data",) mesh."""
+    n = jax.device_count()
+    return jax.make_mesh((n,), ("data",))

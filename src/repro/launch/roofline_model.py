@@ -1,0 +1,142 @@
+"""Roofline model for the TPU v5e-class target.
+
+Hardware constants (per assignment):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM per chip, ~50 GB/s/link ICI.
+
+Terms (seconds), per (arch x mesh), derived from the compiled dry-run:
+  compute    = HLO_FLOPs_global   / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes_global   / (chips * HBM_BW)
+  collective = coll_bytes_global  / (chips * ICI_BW)
+
+cost_analysis() reports *per-device* numbers for the partitioned program, so
+global = per_device * chips; the divisions above then cancel back to
+per-device seconds, which is what we report.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models import api
+from repro.models.api import ModelConfig, ShapeCell
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW_PER_LINK = 50e9       # B/s per link
+ICI_LINKS = 1                # conservative: single-link serialisation
+HBM_PER_CHIP = 16 * 1024**3  # v5e: 16 GiB
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops_global: float
+    useful_flops_ratio: float     # MODEL_FLOPS / (HLO_FLOPs * chips)
+    chips: int = 256
+    memory_kernel_adj_s: float = 0.0   # memory term with Pallas-kernel
+    #                                    score traffic removed (see
+    #                                    scores_traffic_bytes)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s,
+                 "memory": self.memory_kernel_adj_s or self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap roofline step time: max of the three terms,
+        memory taken kernel-adjusted when available."""
+        return max(self.compute_s,
+                   self.memory_kernel_adj_s or self.memory_s,
+                   self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of ideal compute roofline achieved if the step runs at
+        step_time_s: ideal = MODEL_FLOPS/(chips*peak)."""
+        if self.step_time_s == 0:
+            return 0.0
+        ideal = self.model_flops_global / (self.chips * PEAK_FLOPS)
+        return ideal / self.step_time_s
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "memory_kernel_adj_s": self.memory_kernel_adj_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "model_flops_global": self.model_flops_global,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "step_time_s": self.step_time_s,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS = 6*N*D (train), 2*N*D (prefill), 2*N*B (decode: one
+    token/sequence), with N = active params (MoE: top-k of experts)."""
+    n = api.active_param_count(cfg)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch
+
+
+def scores_traffic_bytes(cfg: ModelConfig, cell: ShapeCell,
+                         chips: int) -> float:
+    """Per-device HBM bytes the XLA attention/SSD path spends on
+    materialised score/prob tensors, which the validated Pallas kernels
+    (flash_attention / ssd_scan: blockwise, VMEM-resident) never write.
+
+    Per score element: fwd ~12 B (f32 scores w+r, bf16 probs w+r);
+    bwd with remat="full" ~20 B more.  train=32 B/elem, prefill=12,
+    decode=0 (flash-decode streams KV only).
+    """
+    if cell.kind == "decode":
+        return 0.0
+    per_elem = 32.0 if cell.kind == "train" else 12.0
+    b, s = cell.global_batch, cell.seq_len
+    n_groups, plan = cfg.layer_plan()
+    elems = 0.0
+    n_attn = sum(1 for mix, _ in plan if mix == "attn") * n_groups
+    n_ssm = sum(1 for mix, _ in plan if mix == "mamba") * n_groups
+    if n_attn:
+        elems += n_attn * b * cfg.n_heads * s * s * 0.5     # causal
+    if cfg.family == "encdec":
+        enc = cfg.enc_seq
+        elems += cfg.n_enc_layers * b * cfg.n_heads * enc * enc
+        elems += cfg.n_layers * b * cfg.n_heads * s * enc   # cross
+    if n_ssm:
+        ms = cfg.mamba_spec
+        elems += n_ssm * b * ms.n_heads * s * ms.chunk      # intra-chunk
+    return per_elem * elems / chips
+
+
+def terms_from_costs(flops_dev: float, bytes_dev: float,
+                     coll_bytes_dev: float, chips: int,
+                     cfg: ModelConfig, cell: ShapeCell) -> RooflineTerms:
+    mf = model_flops(cfg, cell)
+    adj = max(bytes_dev - scores_traffic_bytes(cfg, cell, chips), 0.0)
+    return RooflineTerms(
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=bytes_dev / HBM_BW,
+        memory_kernel_adj_s=adj / HBM_BW,
+        collective_s=coll_bytes_dev / (ICI_BW_PER_LINK * ICI_LINKS),
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        coll_bytes_per_device=coll_bytes_dev,
+        model_flops_global=mf,
+        useful_flops_ratio=(mf / (flops_dev * chips)) if flops_dev else 0.0,
+        chips=chips,
+    )

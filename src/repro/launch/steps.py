@@ -1,0 +1,171 @@
+"""Step builders that combine model, optimizer and sharding rules.
+
+A train state is a plain dict {"params", "opt"}; its logical-axes pytree
+mirrors it so NamedShardings derive mechanically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api, io, stack
+from repro.models.api import ModelConfig, ShapeCell
+from repro.optim import adamw
+from repro.sharding import partition
+
+
+# ---------------------------------------------------------------------------
+# train state
+# ---------------------------------------------------------------------------
+
+
+def abstract_train_state(cfg: ModelConfig):
+    params = api.abstract_params(cfg)
+    zeros = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                         params)
+    return {"params": params,
+            "opt": {"m": zeros, "v": zeros,
+                    "count": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array):
+    params = api.init_params(cfg, key)
+    return {"params": params, "opt": adamw.init(params)}
+
+
+def train_state_axis_specs(cfg: ModelConfig):
+    axes = api.param_specs(cfg)
+    return {"params": axes, "opt": {"m": axes, "v": axes, "count": ()}}
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                     mesh=None, rules: partition.AxisRules | None = None,
+                     grad_compress: bool = False,
+                     cast_params_once: bool = True):
+    from repro.optim import grad_compress as gc
+
+    batch_axes = rules.batch_axes if rules is not None else ("data",)
+    loss_fn = stack.build_loss_fn(cfg, mesh, batch_axes=batch_axes)
+
+    if cast_params_once:
+        # mixed precision with f32 masters: cast each matrix to the compute
+        # dtype ONCE, shard-local, *before* the FSDP all-gather -- halves
+        # gather bytes and makes the grad reduce-scatter run in bf16 (the
+        # cast transpose converts back to f32 on the shard).  1-D params
+        # (norm scales, biases, a_log...) stay f32.
+        base_loss_fn = loss_fn
+
+        def loss_fn(params, batch):  # noqa: F811
+            params_c = jax.tree.map(
+                lambda p: p.astype(cfg.compute_dtype)
+                if (hasattr(p, "ndim") and p.ndim >= 2
+                    and p.dtype == jnp.float32) else p, params)
+            return base_loss_fn(params_c, batch)
+
+    def train_step(state, batch):
+        with partition.use_rules(rules):
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+            if grad_compress:
+                grads, ef = gc.compress_grads(grads, state["ef"])
+            params, opt, metrics = adamw.update(
+                opt_cfg, grads, state["opt"], state["params"])
+        metrics = dict(metrics, loss=loss)
+        new_state = {"params": params, "opt": opt}
+        if grad_compress:
+            new_state["ef"] = ef
+        return new_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, cell: ShapeCell, mesh=None,
+                       rules: partition.AxisRules | None = None):
+    batch_axes = rules.batch_axes if rules is not None else ("data",)
+    prefill = stack.build_prefill_fn(cfg, max_len=cell.seq_len, mesh=mesh,
+                                     batch_axes=batch_axes)
+
+    def prefill_step(params, batch):
+        with partition.use_rules(rules):
+            return prefill(params, batch)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, mesh=None,
+                      rules: partition.AxisRules | None = None):
+    batch_axes = rules.batch_axes if rules is not None else ("data",)
+    decode = stack.build_decode_fn(cfg, mesh=mesh, batch_axes=batch_axes)
+
+    def decode_step(params, cache, tokens, pos):
+        with partition.use_rules(rules):
+            return decode(params, cache, tokens, pos)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# sharding assembly for a (cfg, cell) pair
+# ---------------------------------------------------------------------------
+
+
+def cell_shardings(cfg: ModelConfig, cell: ShapeCell, mesh,
+                   rules: partition.AxisRules):
+    """Returns (in_shardings, out_shardings, donate_argnums, arg_specs)
+    matching the step function for the cell kind."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rep = NamedSharding(mesh, P())
+
+    def shard(axes_tree):
+        return partition.tree_shardings(axes_tree, mesh, rules)
+
+    in_axis = io.input_axis_specs(cfg, cell)
+    if cell.kind == "train":
+        state_sh = shard(train_state_axis_specs(cfg))
+        batch_sh = shard(in_axis["batch"])
+        metrics_sh = {"grad_norm": rep, "lr": rep, "loss": rep}
+        return ((state_sh, batch_sh), (state_sh, metrics_sh), (0,))
+    if cell.kind == "prefill":
+        params_sh = shard(api.param_specs(cfg))
+        batch_sh = shard(in_axis["batch"])
+        cache_sh = shard(stack.cache_axis_specs(cfg))
+        return ((params_sh, batch_sh), (cache_sh, rep), ())
+    # decode
+    params_sh = shard(api.param_specs(cfg))
+    cache_sh = shard(in_axis["cache"])
+    tok_sh = shard(in_axis["tokens"])
+    pos_sh = rep
+    logits_sh = NamedSharding(
+        mesh, partition.to_pspec(("batch", "vocab"), rules))
+    tok_out = NamedSharding(mesh, partition.to_pspec(("batch",), rules))
+    return ((params_sh, cache_sh, tok_sh, pos_sh),
+            (cache_sh, tok_out, logits_sh), (1,))
+
+
+def abstract_inputs(cfg: ModelConfig, cell: ShapeCell):
+    """Abstract argument tuple for the cell's step function."""
+    specs = io.input_specs(cfg, cell)
+    if cell.kind == "train":
+        return (abstract_train_state(cfg), specs["batch"])
+    if cell.kind == "prefill":
+        return (api.abstract_params(cfg), specs["batch"])
+    return (api.abstract_params(cfg), specs["cache"], specs["tokens"],
+            specs["pos"])
+
+
+def step_for_cell(cfg: ModelConfig, cell: ShapeCell, mesh, rules,
+                  opt_cfg: adamw.AdamWConfig | None = None):
+    if cell.kind == "train":
+        return build_train_step(cfg, opt_cfg or adamw.AdamWConfig(),
+                                mesh, rules)
+    if cell.kind == "prefill":
+        return build_prefill_step(cfg, cell, mesh, rules)
+    return build_decode_step(cfg, mesh, rules)

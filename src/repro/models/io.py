@@ -1,0 +1,77 @@
+"""Input specifications per (config, shape-cell).
+
+`input_specs` returns ShapeDtypeStructs (dry-run / AOT lowering, never
+allocates); `make_batch` returns concrete arrays for smoke tests and real
+runs; `input_axis_specs` returns the matching logical-axes pytree used to
+derive NamedShardings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import stack
+from repro.models.api import ModelConfig, ShapeCell
+
+
+def _batch_inputs(cfg: ModelConfig, b: int, s: int):
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def _batch_axes_tree(cfg: ModelConfig):
+    axes = {"tokens": ("batch", None)}
+    if cfg.family == "encdec":
+        axes["frames"] = ("batch", None, None)
+    if cfg.family == "vlm":
+        axes["patches"] = ("batch", None, None)
+    return axes
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell):
+    """Abstract inputs for the cell's step function.
+
+    train/prefill: {"batch": {...}}
+    decode:        {"cache": ..., "tokens": [B,1], "pos": scalar}
+    """
+    if cell.kind in ("train", "prefill"):
+        return {"batch": _batch_inputs(cfg, cell.global_batch, cell.seq_len)}
+    return {
+        "cache": stack.abstract_cache(cfg, cell.global_batch, cell.seq_len),
+        "tokens": jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_axis_specs(cfg: ModelConfig, cell: ShapeCell):
+    if cell.kind in ("train", "prefill"):
+        return {"batch": _batch_axes_tree(cfg)}
+    return {
+        "cache": stack.cache_axis_specs(cfg),
+        "tokens": ("batch", None),
+        "pos": (),
+    }
+
+
+def make_batch(cfg: ModelConfig, cell: ShapeCell, key: jax.Array):
+    b, s = cell.global_batch, cell.seq_len
+    kt, kf = jax.random.split(key)
+    batch = {"tokens": jax.random.randint(kt, (b, s), 0, cfg.vocab,
+                                          jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = (jax.random.normal(
+            kf, (b, cfg.enc_seq, cfg.d_model)) * 0.02).astype(jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = (jax.random.normal(
+            kf, (b, cfg.n_patches, cfg.d_model)) * 0.02).astype(jnp.bfloat16)
+    return batch
+
+
+def smoke_cell(kind: str, b: int = 2, s: int = 32) -> ShapeCell:
+    return ShapeCell(f"smoke_{kind}", s, b, kind)

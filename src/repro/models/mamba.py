@@ -1,0 +1,157 @@
+"""Mamba2 (state-space duality) mixer block.
+
+Layout conventions:
+  x   [B, L, H, P]   (H heads of dim P = headdim)
+  B,C [B, L, G, N]   (G groups, N = d_state; G divides H)
+  dt  [B, L, H]      per-head step sizes (softplus-activated)
+  A   [H]            negative per-head decay rates
+
+TP note: the input projection is stored as *separate* weights per segment
+(w_z, w_x, w_bc, w_dt) rather than one fused [D, 2*d_inner+2GN+H] matrix, so
+that the head-aligned dims (d_inner, H) shard cleanly over the ``model`` mesh
+axis while the tiny B/C projections stay replicated.  The chunked scan itself
+lives in repro.kernels.ssd_scan (Pallas kernel + pure-jnp ref).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaSpec:
+    d_model: int
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_kernel: int = 4
+    chunk: int = 128
+    ssd_impl: str = "xla"  # "xla" | "pallas" | "pallas_interpret"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.headdim == 0
+        return self.d_inner // self.headdim
+
+    @property
+    def bc_dim(self) -> int:
+        return 2 * self.n_groups * self.d_state
+
+
+def _causal_conv(u, w, bias):
+    """Depthwise causal conv over seq. u: [B,L,C]; w: [K, C]; bias [C]."""
+    k, ch = w.shape
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad.astype(jnp.float32),
+        w[:, None, :].astype(jnp.float32),          # [K, 1, C]
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=ch)
+    return jax.nn.silu(out + bias.astype(jnp.float32)).astype(u.dtype)
+
+
+def _conv_step(buf, u_new, w, bias):
+    """Single-token depthwise conv. buf [B,K-1,C], u_new [B,1,C] -> [B,C].
+    buf may be stored in a quantised cache dtype (e.g. f8)."""
+    cache_dtype = buf.dtype
+    buf = jnp.concatenate([buf.astype(u_new.dtype),
+                           u_new], axis=1)          # [B, K, C]
+    out = jnp.einsum("bkc,kc->bc", buf.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    out = jax.nn.silu(out + bias.astype(jnp.float32))
+    return out.astype(u_new.dtype), buf[:, 1:, :].astype(cache_dtype)
+
+
+def mamba_block(params, x, spec: MambaSpec, state=None):
+    """Apply the mixer.
+
+    Train / prefill (state=None): full-sequence chunked SSD.  Returns
+      (y, new_state) where new_state = (ssm_state, conv_x_tail, conv_bc_tail)
+      so prefill can seed decode.
+    Decode: state as above; x is [B,1,D]; returns (y, new_state).
+    """
+    from repro.kernels.ssd_scan import ops as ssd_ops
+
+    bsz, seqlen, _ = x.shape
+    z = jnp.einsum("bld,di->bli", x, params["w_z"].astype(x.dtype))
+    xu = jnp.einsum("bld,di->bli", x, params["w_x"].astype(x.dtype))
+    bc = jnp.einsum("bld,di->bli", x, params["w_bc"].astype(x.dtype))
+    dt = jnp.einsum("bld,dh->blh", x, params["w_dt"].astype(x.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))           # [H]
+    gn = spec.n_groups * spec.d_state
+
+    if seqlen > 1 or state is None:
+        # full-sequence chunked scan (training, or prefill into a cache);
+        # an existing ssm state (all-zeros at prefill start) seeds the scan.
+        initial_state = state[0] if state is not None else None
+        xc = _causal_conv(xu, params["w_conv_x"], params["b_conv_x"])
+        bcc = _causal_conv(bc, params["w_conv_bc"], params["b_conv_bc"])
+        bi, ci = jnp.split(bcc, [gn], axis=-1)
+        xi = xc.reshape(bsz, seqlen, spec.n_heads, spec.headdim)
+        bi = bi.reshape(bsz, seqlen, spec.n_groups, spec.d_state)
+        ci = ci.reshape(bsz, seqlen, spec.n_groups, spec.d_state)
+        y, ssm_state = ssd_ops.ssd(
+            xi, dt, a, bi, ci, chunk=spec.chunk, impl=spec.ssd_impl,
+            initial_state=initial_state)
+        y = y + xi.astype(jnp.float32) * \
+            params["d_skip"].astype(jnp.float32)[None, None, :, None]
+        k1 = spec.conv_kernel - 1
+
+        def tail(u):
+            t = u[:, -k1:, :]
+            if seqlen < k1:
+                t = jnp.pad(t, ((0, 0), (k1 - seqlen, 0), (0, 0)))
+            return t
+        new_state = (ssm_state, tail(xu), tail(bc))
+    else:
+        ssm_state, buf_x, buf_bc = state
+        xc, buf_x = _conv_step(buf_x, xu, params["w_conv_x"],
+                               params["b_conv_x"])
+        bcc, buf_bc = _conv_step(buf_bc, bc, params["w_conv_bc"],
+                                 params["b_conv_bc"])
+        bi, ci = jnp.split(bcc, [gn], axis=-1)
+        xi = xc.reshape(bsz, spec.n_heads, spec.headdim)
+        bi = bi.reshape(bsz, spec.n_groups, spec.d_state)
+        ci = ci.reshape(bsz, spec.n_groups, spec.d_state)
+        dt1 = dt[:, 0]                                          # [B, H]
+        decay = jnp.exp(dt1 * a[None, :])                       # [B, H]
+        rep = spec.n_heads // spec.n_groups
+        b_h = jnp.repeat(bi, rep, axis=1).astype(jnp.float32)   # [B, H, N]
+        c_h = jnp.repeat(ci, rep, axis=1).astype(jnp.float32)
+        xf = xi.astype(jnp.float32)
+        ssm_state = (ssm_state * decay[..., None, None]
+                     + dt1[..., None, None] * xf[..., :, None]
+                     * b_h[..., None, :])                       # [B,H,P,N]
+        y = jnp.einsum("bhpn,bhn->bhp", ssm_state, c_h)
+        y = y + xf * params["d_skip"].astype(jnp.float32)[None, :, None]
+        y = y[:, None]                                          # [B,1,H,P]
+        new_state = (ssm_state, buf_x, buf_bc)
+
+    y = y.reshape(bsz, seqlen, spec.d_inner)
+    # gated RMSNorm (mamba2 style): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.rms_norm(y.astype(x.dtype), params["norm_w"])
+    out = jnp.einsum("bli,id->bld", y, params["w_out"].astype(x.dtype))
+    from repro.sharding import partition
+    out = partition.constrain(out, ("batch", "seq", "embed_act"))
+    return out, new_state
+
+
+def init_state(bsz: int, spec: MambaSpec, dtype=jnp.float32):
+    k1 = spec.conv_kernel - 1
+    return (jnp.zeros((bsz, spec.n_heads, spec.headdim, spec.d_state),
+                      jnp.float32),
+            jnp.zeros((bsz, k1, spec.d_inner), dtype),
+            jnp.zeros((bsz, k1, spec.bc_dim), dtype))

@@ -1,0 +1,102 @@
+"""AdamW with decoupled weight decay, global-norm clipping and LR schedules.
+
+Pure JAX (no optax dependency).  Optimizer state is a dict {"m","v","count"}
+whose m/v mirror the param pytree (and therefore shard identically).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"        # cosine | linear | constant
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * (1 - frac)
+    else:
+        decay = jnp.float32(1.0)
+    return cfg.lr * warm * decay
+
+
+def _decay_mask(params) -> list[bool]:
+    """True where weight decay applies: 2D+ matrices, not norms/biases."""
+    flat, _ = jax.tree.flatten_with_path(params)
+    mask = []
+    for path, leaf in flat:
+        name = str(path[-1]).lower()
+        is_norm_or_bias = any(t in name for t in
+                              ("norm", "bias", "b_", "bq", "bv", "bo",
+                               "ln", "a_log", "d_skip"))
+        mask.append(leaf.ndim >= 2 and not is_norm_or_bias)
+    return mask
+
+
+def init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = lr_at(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    mask = _decay_mask(params)
+
+    new_p, new_m, new_v = [], [], []
+    for g, p, m, v, wd in zip(flat_g, flat_p, flat_m, flat_v, mask):
+        g = g.astype(jnp.float32)
+        pf = p.astype(jnp.float32)
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if wd:
+            upd = upd + cfg.weight_decay * pf
+        pf = pf - lr * upd
+        new_p.append(pf.astype(p.dtype))
+        new_m.append(m.astype(p.dtype))
+        new_v.append(v.astype(p.dtype))
+
+    return (jax.tree.unflatten(treedef, new_p),
+            {"m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v),
+             "count": count},
+            {"grad_norm": gnorm, "lr": lr})

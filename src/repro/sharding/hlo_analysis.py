@@ -1,0 +1,188 @@
+"""Post-compile HLO analysis: collective-byte accounting.
+
+collective_bytes is not reported by compiled.cost_analysis(); we parse the
+(partitioned, per-device) HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+HLO prints operand types inline, e.g.::
+
+    %all-reduce.1 = bf16[128,512]{1,0} all-reduce(bf16[128,512]{1,0} %x), ...
+
+Sizes are PER-DEVICE (partitioned program).  NOTE: ops inside while-loop
+bodies appear once; the dry-run therefore derives totals from *unrolled*
+small-depth compiles and extrapolates (see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_OP_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|\S+)\s+(" + "|".join(COLLECTIVES) +
+    r")(-start)?\(")
+_TYPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred)"
+                      r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+def _operand_section(line: str) -> str:
+    """Text inside the outermost parens of the op call on this line."""
+    i = line.find("(")
+    if i < 0:
+        return ""
+    depth, j = 0, i
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    return line[i + 1:j]
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+
+
+def _group_size(line: str, default: int = 16) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    return len(m.group(1).split(","))
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-opcode operand bytes of collectives (per device).
+
+    `total` follows the assignment formula (sum of operand sizes).
+    `wire_total` additionally estimates bytes actually serialised through a
+    device's links (ring algorithms, group size g parsed per op):
+      all-reduce 2(g-1)/g x operand; reduce-scatter/all-to-all/permute
+      (g-1)/g x operand; all-gather (g-1) x operand (operand = one shard).
+    """
+    out: dict = defaultdict(int)
+    counts: dict = defaultdict(int)
+    wire: dict = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        section = _operand_section(line[m.start():])
+        nbytes = sum(_shape_bytes(d, s)
+                     for d, s in _TYPE_RE.findall(section))
+        g = _group_size(line)
+        if op == "all-reduce":
+            w = 2 * (g - 1) / max(g, 1) * nbytes
+        elif op == "all-gather":
+            w = (g - 1) * nbytes
+        else:
+            w = (g - 1) / max(g, 1) * nbytes
+        out[op] += nbytes
+        wire[op] += w
+        counts[op] += 1
+    return {"per_op": dict(out), "counts": dict(counts),
+            "wire_per_op": {k: int(v) for k, v in wire.items()},
+            "total": sum(out.values()),
+            "wire_total": int(sum(wire.values()))}
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+ = ((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+    r"([\w\-]+)\(")
+
+
+def _result_bytes(type_str: str) -> int:
+    return sum(_shape_bytes(d, s) for d, s in _TYPE_RE.findall(type_str))
+
+
+def bytes_by_op(hlo_text: str, top: int = 15) -> dict:
+    """Aggregate (output + operand) bytes per opcode over the optimised HLO.
+
+    Approximates HBM traffic attribution: for fusions the I/O is what hits
+    HBM; elementwise ops inside fusions don't appear.  Loop bodies counted
+    once (use on unrolled cost compiles).
+    """
+    from collections import defaultdict
+    out_bytes: dict = defaultdict(int)
+    counts: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        type_str, opcode = m.group(1), m.group(2)
+        if opcode in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast"):
+            continue
+        if opcode == "dynamic-update-slice":
+            # in-place (donated) update: traffic = read+write of the update
+            # piece (operand 1), not the whole buffer
+            ops = _TYPE_RE.findall(_operand_section(line[m.end() - 1:]))
+            if len(ops) >= 2:
+                piece = _shape_bytes(*ops[1])
+                out_bytes[opcode] += 2 * piece
+                counts[opcode] += 1
+                continue
+        total = _result_bytes(type_str)
+        total += sum(_shape_bytes(d, s) for d, s in
+                     _TYPE_RE.findall(_operand_section(line[m.end() - 1:])))
+        out_bytes[opcode] += total
+        counts[opcode] += 1
+    ranked = sorted(out_bytes.items(), key=lambda kv: -kv[1])[:top]
+    return {op: {"bytes": b, "count": counts[op]} for op, b in ranked}
+
+
+# Op classes whose I/O genuinely hits HBM on a TPU compile.  The CPU
+# backend's optimisation pipeline leaves elementwise chains (convert /
+# multiply / select / broadcast...) unfused, so raw cost_analysis
+# "bytes accessed" wildly overcounts HBM traffic vs what the TPU compiler
+# (or our Pallas kernels) would produce; those ops fuse into their
+# producers/consumers on TPU and are excluded here.
+HBM_REAL_OPS = frozenset({
+    "dot", "convolution", "fusion", "copy", "transpose",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "sort", "cumsum",
+    "reduce-window", "while",
+})
+
+
+def hbm_model_bytes(hlo_text: str) -> int:
+    """Fusion-aware HBM-traffic estimate (see HBM_REAL_OPS)."""
+    per_op = bytes_by_op(hlo_text, top=10 ** 6)
+    return sum(v["bytes"] for op, v in per_op.items()
+               if op in HBM_REAL_OPS and op != "while")
+
+
+def cost_analysis_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float))}
+
+
+def memory_stats_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "temp_size_in_bytes")
+    return {k: int(getattr(ma, k)) for k in keys}

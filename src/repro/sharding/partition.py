@@ -1,0 +1,157 @@
+"""Logical-axis -> mesh-axis partitioning rules.
+
+Model code tags params/inputs with *logical* axis names (see
+repro.models.api.param_specs / repro.models.io.input_axis_specs).  A rule set
+maps logical names to mesh axes; this module turns axes pytrees into
+PartitionSpec / NamedSharding pytrees.
+
+Axis vocabulary:
+  params:  layers, embed (fsdp-able), embed_nofsdp, q_proj, kv_proj, mlp,
+           vocab, expert, expert_mlp, inner, heads_ssm
+  data:    batch, seq, seq_kv, kv_heads_kv
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+MeshAxes = Any  # str | tuple[str, ...] | None
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    rules: Mapping[str, MeshAxes]
+
+    def get(self, name: str | None) -> MeshAxes:
+        if name is None:
+            return None
+        if name not in self.rules:
+            raise KeyError(f"no rule for logical axis {name!r}")
+        return self.rules[name]
+
+    @property
+    def batch_axes(self):
+        """Raw rule value for "batch" — a valid PartitionSpec entry
+        (None | str | tuple of str)."""
+        return self.get("batch")
+
+
+def flat_axes(value) -> tuple:
+    """Flatten a rule value into a tuple of mesh-axis names (drops None)."""
+    if value is None:
+        return ()
+    if isinstance(value, (tuple, list)):
+        out = []
+        for v in value:
+            out.extend(flat_axes(v))
+        return tuple(out)
+    return (value,)
+
+
+def make_rules(kind: str, multi_pod: bool = False,
+               overrides: Mapping[str, MeshAxes] | None = None) -> AxisRules:
+    """kind: "train" | "serve"."""
+    batch = ("pod", "data") if multi_pod else ("data",)
+    base = {
+        "layers": None,
+        "batch": batch,
+        "seq": None,
+        "q_proj": "model",
+        "kv_proj": "model",
+        "heads": "model",
+        "seq_attn": None,
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_mlp": None,
+        "inner": "model",
+        "heads_ssm": "model",
+        "embed_nofsdp": None,
+        "embed_act": None,
+    }
+    if kind == "train":
+        base["embed"] = "data"      # ZeRO-3 / FSDP over the data axis
+        base["seq"] = "model"       # Megatron-style sequence parallelism
+        base["seq_kv"] = None       # caches unused in training
+        base["kv_heads_kv"] = None
+    elif kind == "train_fsdp":
+        # pure-FSDP (ZeRO-3 over the WHOLE mesh, no tensor parallelism):
+        # when tokens-per-device is large, per-layer activation AG/AR of
+        # TP+SP costs ~5x tokens x d_model, while pure FSDP only moves
+        # params (~3x params/layer). Best for dense archs at train_4k's
+        # global batch; MoE keeps TP/EP (expert axis needs "model").
+        batch_all = batch + ("model",)
+        base.update({
+            "batch": batch_all,
+            "embed": ("data", "model"),
+            "seq": None,
+            "q_proj": None, "kv_proj": None, "heads": None,
+            "mlp": None, "vocab": None, "inner": None,
+            "heads_ssm": None, "expert": None, "expert_mlp": None,
+            "seq_kv": None, "kv_heads_kv": None,
+        })
+    elif kind == "serve":
+        base["embed"] = None        # latency path: TP only
+        # KV caches are SEQUENCE-sharded over the TP axis (works for any
+        # kv_heads vs TP degree; see layers.sharded_cache_attention)
+        base["seq_kv"] = "model"
+        base["kv_heads_kv"] = None
+    else:
+        raise ValueError(kind)
+    if overrides:
+        base.update(overrides)
+    return AxisRules(base)
+
+
+def to_pspec(axes: tuple, rules: AxisRules) -> P:
+    return P(*(rules.get(a) for a in axes))
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def tree_pspecs(axes_tree, rules: AxisRules):
+    return jax.tree.map(lambda a: to_pspec(a, rules), axes_tree,
+                        is_leaf=_is_axes)
+
+
+def tree_shardings(axes_tree, mesh: Mesh, rules: AxisRules):
+    return jax.tree.map(lambda a: NamedSharding(mesh, to_pspec(a, rules)),
+                        axes_tree, is_leaf=_is_axes)
+
+
+# ---------------------------------------------------------------------------
+# activation constraint context (used sparsely inside model code)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: list[AxisRules | None] = [None]
+
+
+class use_rules:
+    def __init__(self, rules: AxisRules | None):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE.pop()
+
+
+def active_rules() -> AxisRules | None:
+    return _ACTIVE[-1]
+
+
+def constrain(x: jax.Array, axes: tuple) -> jax.Array:
+    """Apply with_sharding_constraint if a rule set is active."""
+    rules = _ACTIVE[-1]
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, to_pspec(axes, rules))

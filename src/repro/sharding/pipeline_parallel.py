@@ -1,0 +1,96 @@
+"""GPipe-style pipeline parallelism over a mesh axis (default: "pod").
+
+For >=4-pod topologies the slow inter-pod ICI favours pipeline parallelism
+over DP (only stage-boundary activations cross pods instead of full
+gradients).  This module provides a self-contained schedule:
+
+  - the model is split into S stages (contiguous layer groups) whose params
+    carry a leading stage axis sharded over `axis`;
+  - the global batch is split into M microbatches;
+  - at schedule tick t, stage s processes microbatch (t - s); activations
+    move to the next stage via jax.lax.ppermute (point-to-point over the
+    pod links — exactly the collective you want crossing pods);
+  - bubbles are masked; outputs are valid on the last stage and broadcast.
+
+stage_fn must be shape-preserving on the activation ([b, ...] -> [b, ...]),
+which holds for residual-stack stages; embedding/unembedding stay outside
+(replicated over the stage axis).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe_apply(stage_fn: Callable, stage_params, x, *, mesh,
+                axis: str = "pod", n_micro: int | None = None,
+                extra_spec=P()):
+    """Run S pipeline stages over x: equivalent to sequentially applying
+    stage_fn with stage_params[s] for s in range(S).
+
+    stage_params: pytree with leading stage axis (size S) on every leaf.
+    x: [B, ...] activations (replicated over `axis`).
+    Returns [B, ...] (replicated over `axis`).
+    """
+    s_stages = mesh.shape[axis]
+    b = x.shape[0]
+    n_micro = n_micro or max(s_stages, 1)
+    assert b % n_micro == 0, (b, n_micro)
+    mb = b // n_micro
+    micro = x.reshape(n_micro, mb, *x.shape[1:])
+    ticks = n_micro + s_stages - 1
+    perm = [(i, (i + 1) % s_stages) for i in range(s_stages)]
+
+    p_spec = jax.tree.map(lambda _: P(axis), stage_params)
+
+    def body(params, xs):
+        sid = jax.lax.axis_index(axis)
+        local = jax.tree.map(lambda a: a[0], params)   # this stage's params
+
+        def tick(t, carry):
+            fifo, outs = carry
+            mb_idx = t - sid
+            active = (mb_idx >= 0) & (mb_idx < n_micro)
+            # stage 0 pulls its microbatch; others take the permuted carry
+            inp0 = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            inp = jnp.where(sid == 0, inp0, fifo)
+            h = stage_fn(local, inp)
+            h = jnp.where(active[..., None, None] if h.ndim > 1 else active,
+                          h, fifo)
+            # collect finished microbatches on the last stage
+            out_idx = jnp.clip(t - (s_stages - 1), 0, n_micro - 1)
+            write = (sid == s_stages - 1) & active
+            cur = jax.lax.dynamic_index_in_dim(outs, out_idx, 0,
+                                               keepdims=False)
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jnp.where(write, h, cur), out_idx, 0)
+            # hand off to the next stage (pod-to-pod point-to-point)
+            fifo = jax.lax.ppermute(h, axis, perm)
+            return fifo, outs
+
+        fifo0 = jnp.zeros_like(micro[0])
+        outs0 = jnp.zeros_like(xs)
+        _, outs = jax.lax.fori_loop(0, ticks, tick, (fifo0, outs0))
+        # broadcast the last stage's outputs to every stage replica
+        is_last = (sid == s_stages - 1).astype(outs.dtype)
+        outs = jax.lax.psum(outs * is_last, axis)
+        return outs
+
+    outs = jax.shard_map(
+        body, mesh=mesh, in_specs=(p_spec, extra_spec), out_specs=extra_spec,
+        check_vma=False)(stage_params, micro)
+    return outs.reshape(b, *x.shape[1:])
+
+
+def split_stages(stacked_params, n_stages: int):
+    """[L, ...] layer-stacked params -> [S, L/S, ...] stage-stacked."""
+    def f(a):
+        l = a.shape[0]
+        assert l % n_stages == 0, (l, n_stages)
+        return a.reshape(n_stages, l // n_stages, *a.shape[1:])
+    return jax.tree.map(f, stacked_params)

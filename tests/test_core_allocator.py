@@ -1,0 +1,54 @@
+"""Property tests for the buddy slot allocator."""
+from __future__ import annotations
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.allocator import BuddyAllocator, Range
+
+
+@given(st.sampled_from([1, 2, 3, 4, 5, 6, 8]),
+       st.lists(st.tuples(st.sampled_from(["alloc1", "alloc2", "alloc4",
+                                           "free"]),
+                          st.integers(0, 100)), max_size=60))
+@settings(max_examples=200, deadline=None)
+def test_allocator_invariants(n_slots, ops):
+    a = BuddyAllocator(n_slots)
+    live: list[Range] = []
+    for op, arg in ops:
+        if op == "free" and live:
+            r = live.pop(arg % len(live))
+            a.free(r)
+        elif op.startswith("alloc"):
+            size = int(op[5:])
+            r = a.alloc(size)
+            if r is not None:
+                # aligned, in range, power-of-two
+                assert r.start % r.size == 0
+                assert r.start + r.size <= n_slots
+                live.append(r)
+    # no double allocation: busy == union of live ranges, sizes consistent
+    claimed = [i for r in live for i in r.slots]
+    assert sorted(claimed) == sorted(a.busy)
+    assert len(set(claimed)) == len(claimed)
+
+
+def test_merge_and_split_cycle():
+    a = BuddyAllocator(4)
+    r1 = a.alloc(1)
+    r4 = a.alloc(4)
+    assert r4 is None, "cannot merge past a busy buddy"
+    r2 = a.alloc(2)
+    assert r2 is not None and r2.start == 2, "aligned run chosen"
+    a.free(r1)
+    assert a.alloc(2).start == 0
+    assert a.largest_free() == 0
+
+
+def test_largest_free_tracks_merges():
+    a = BuddyAllocator(8)
+    assert a.largest_free() == 8
+    r = a.alloc(1)
+    assert a.largest_free() == 4
+    a.free(r)
+    assert a.largest_free() == 8

@@ -1,0 +1,88 @@
+"""Live daemon integration: multi-tenant jobs on a single-device shell.
+
+(Multi-slot live execution is exercised by benchmarks/single_tenant.py in a
+subprocess with xla_force_host_platform_device_count; unit tests must keep
+the default 1-device view.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Daemon, Registry, Shell, default_registry, \
+    uniform_shell
+from repro.core.registry import ImplAlt, ModuleDescriptor
+from repro.core import zoo
+
+
+@pytest.fixture(scope="module")
+def daemon():
+    spec = uniform_shell("host1_s1", (1, 1), 1)
+    reg = default_registry()
+    reg.register_shell(spec)
+    d = Daemon(Shell(spec), reg)
+    yield d
+    d.shutdown()
+
+
+def _mandel_inputs(n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    re = rng.uniform(-2, 1, (256, 256)).astype(np.float32)
+    im = rng.uniform(-1.5, 1.5, (256, 256)).astype(np.float32)
+    return re, im
+
+
+def test_single_job_roundtrip(daemon):
+    re, im = _mandel_inputs()
+    h = daemon.submit("alice", "mandelbrot", [(re, im)])
+    (out,) = h.future.result(timeout=120)
+    prog = zoo.build_mandelbrot(daemon.shell.slots[0].mesh, 1)
+    expected = jax.jit(prog.fn)(None, re, im)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expected))
+
+
+def test_multi_tenant_concurrent_jobs(daemon):
+    """Two tenants, different accelerators, data-parallel chunks."""
+    re, im = _mandel_inputs(seed=1)
+    img = np.random.default_rng(2).random((1024, 1024)).astype(np.float32)
+    h1 = daemon.submit("alice", "mandelbrot", [(re, im)] * 3)
+    h2 = daemon.submit("bob", "sobel", [(img,)] * 3)
+    out1 = h1.future.result(timeout=300)
+    out2 = h2.future.result(timeout=300)
+    assert len(out1) == 3 and len(out2) == 3
+    assert all(np.asarray(o).shape == (256, 256) for o in out1)
+    assert all(np.asarray(o).shape == (1024, 1024) for o in out2)
+    # cooperative time-multiplexing on one slot across tenants
+    assert daemon.stats["chunks"] >= 7
+
+
+def test_module_reuse_avoids_reload(daemon):
+    re, im = _mandel_inputs(seed=3)
+    before = daemon.stats["reconfigurations"]
+    h = daemon.submit("alice", "mandelbrot", [(re, im)] * 4)
+    h.future.result(timeout=300)
+    # mandelbrot was already resident from earlier tests
+    assert daemon.stats["reconfigurations"] <= before + 1
+    assert daemon.stats["reuses"] > 0
+
+
+def test_bus_adaptor_pads_and_casts(daemon):
+    """Caller sends float64 and a smaller tile; adaptors fix it up."""
+    re = np.zeros((200, 256), np.float64)
+    im = np.zeros((200, 256), np.float64)
+    h = daemon.submit("carol", "mandelbrot", [(re, im)])
+    (out,) = h.future.result(timeout=120)
+    assert np.asarray(out).shape == (256, 256)
+
+
+def test_registry_roundtrip(tmp_path):
+    reg = default_registry()
+    reg.save(tmp_path)
+    reg2 = Registry.load(tmp_path)
+    assert set(reg2.modules) == set(reg.modules)
+    assert set(reg2.shells) == set(reg.shells)
+    m = reg2.module("mandelbrot")
+    assert m.footprints == [1, 2, 4]
+    assert m.load_builder() is zoo.build_mandelbrot

@@ -1,0 +1,120 @@
+"""Resource-elastic scheduling policy + simulator properties.
+
+Validates the paper's section 4.4 claims structurally:
+  - every submitted chunk completes exactly once (simulator assertion);
+  - round-robin fairness across tenants;
+  - replication uses free slots (single-tenant speedup, Fig 19-21);
+  - elastic scheduling beats fixed scheduling on utilization/makespan
+    for replicable workloads (Fig 15);
+  - resident-module reuse avoids reconfigurations (section 4.4.3).
+"""
+from __future__ import annotations
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import ImplAlt, ModuleDescriptor, PolicyConfig, Registry, \
+    SimJob, simulate
+
+
+def _registry(perfect_scaling: bool = True) -> Registry:
+    reg = Registry()
+    reg.register_module(ModuleDescriptor(
+        name="app", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 10.0),
+               ImplAlt("x2", 2, 5.0 if perfect_scaling else 8.0),
+               ImplAlt("x4", 4, 2.5 if perfect_scaling else 7.0))))
+    reg.register_module(ModuleDescriptor(
+        name="small", entrypoint="x:y", impls=(ImplAlt("x1", 1, 4.0),)))
+    return reg
+
+
+jobs_strategy = st.lists(
+    st.tuples(st.floats(0, 100), st.sampled_from(["u0", "u1", "u2"]),
+              st.sampled_from(["app", "small"]), st.integers(1, 9)),
+    min_size=1, max_size=25)
+
+
+@given(jobs_strategy, st.booleans(), st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=120, deadline=None)
+def test_all_chunks_complete_and_capacity_respected(raw, elastic, n_slots):
+    jobs = [SimJob(t, u, m, c) for t, u, m, c in raw]
+    res = simulate(_registry(), n_slots, jobs,
+                   PolicyConfig(elastic=elastic))
+    # capacity: no more than n_slots busy at any instant
+    events = []
+    for t0, t1, (s, size), _ in res.timeline:
+        events += [(t0, size), (t1, -size)]
+    busy = 0
+    # at equal timestamps, completions (-size) precede starts (+size)
+    for _, d in sorted(events, key=lambda e: (e[0], e[1])):
+        busy += d
+        assert busy <= n_slots
+    # slot ranges never overlap in time
+    per_slot: dict[int, list] = {}
+    for t0, t1, (s, size), _ in res.timeline:
+        for i in range(s, s + size):
+            per_slot.setdefault(i, []).append((t0, t1))
+    for spans in per_slot.values():
+        spans.sort()
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert b0 >= a1 - 1e-9, "slot double-booked"
+
+
+def test_single_tenant_replication_scales():
+    """Fig 19-21: one tenant, many chunks -> near-linear with slots."""
+    reg = _registry()
+    lat = {}
+    for n_slots in (1, 2, 4):
+        jobs = [SimJob(0.0, "u0", "small", 8)]
+        res = simulate(reg, n_slots, jobs)
+        lat[n_slots] = res.makespan
+    assert lat[2] < 0.62 * lat[1]
+    assert lat[4] <= 0.36 * lat[1]  # reconfig overhead bounds perfect scaling
+
+
+def test_replacement_uses_bigger_impl_when_idle():
+    """DCT-style super-linear case: 1 chunk, 4 slots free -> x4 impl."""
+    reg = _registry()
+    res = simulate(reg, 4, [SimJob(0.0, "u0", "app", 1)])
+    (t0, t1, (s, size), _), = res.timeline
+    assert size == 4, "idle machine should host the biggest alternative"
+
+
+def test_elastic_beats_fixed_on_replicable_load():
+    """Fig 15: elastic vs standard fixed-module scheduling."""
+    reg = _registry()
+    jobs = [SimJob(0.0, "u0", "app", 6), SimJob(0.0, "u1", "app", 2),
+            SimJob(30.0, "u2", "app", 4)]
+    el = simulate(reg, 4, jobs, PolicyConfig(elastic=True))
+    fx = simulate(reg, 4, jobs, PolicyConfig(elastic=False))
+    assert el.makespan <= fx.makespan
+    assert el.utilization >= fx.utilization - 1e-9
+
+
+def test_round_robin_fairness():
+    """Two tenants submitting together interleave at request granularity."""
+    reg = _registry()
+    jobs = [SimJob(0.0, "u0", "small", 4), SimJob(0.0, "u1", "small", 4)]
+    res = simulate(reg, 1, jobs, PolicyConfig(upsize_when_idle=False))
+    order = [rid for *_, rid in sorted(res.timeline)]
+    # strict alternation on a single slot
+    assert order == [0, 1, 0, 1, 0, 1, 0, 1]
+
+
+def test_reuse_avoids_reconfiguration():
+    reg = _registry()
+    jobs = [SimJob(0.0, "u0", "small", 3), SimJob(50.0, "u1", "small", 3)]
+    res = simulate(reg, 1, jobs)
+    assert res.reconfigurations == 1, \
+        "same module back-to-back must not reconfigure"
+
+
+def test_multi_tenant_dynamic_reallocation():
+    """Fig 22: after one tenant drains, the other's chunks spread out."""
+    reg = _registry()
+    jobs = [SimJob(0.0, "u0", "app", 8), SimJob(0.0, "u1", "app", 1)]
+    res = simulate(reg, 4, jobs)
+    widths_late = [size for t0, _, (s, size), rid in res.timeline
+                   if t0 > 15.0]
+    assert res.utilization > 0.75  # trailing chunks leave slots idle (paper 5.5.1)

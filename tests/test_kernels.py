@@ -1,0 +1,160 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle.
+
+Kernels execute their real TPU kernel body in Python on CPU via interpret
+mode; tolerances account for f32-accumulation vs oracle differences and
+bf16 inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan import ref as ssd_ref
+from repro.kernels.ssd_scan import ssd_scan as ssd_knl
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+def _qkv(key, b, sq, sk, hq, hkv, hd, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, sq, hq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, sk, hkv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (b, sk, hkv, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+FLASH_CASES = [
+    # (b, sq, sk, hq, hkv, hd, dtype, block_q, block_k)
+    (1, 128, 128, 4, 4, 64, jnp.float32, 64, 64),      # MHA
+    (2, 256, 256, 8, 2, 64, jnp.float32, 128, 128),    # GQA 4:1
+    (1, 384, 384, 4, 1, 32, jnp.float32, 128, 128),    # MQA, non-pow2 seq
+    (1, 200, 200, 4, 2, 64, jnp.float32, 64, 64),      # ragged -> padding
+    (2, 128, 128, 4, 4, 128, jnp.bfloat16, 64, 64),    # bf16
+    (1, 512, 512, 2, 2, 16, jnp.float32, 128, 256),    # tiny head_dim
+]
+
+
+@pytest.mark.parametrize(
+    "b,sq,sk,hq,hkv,hd,dtype,bq,bk", FLASH_CASES)
+def test_flash_attention_matches_ref(b, sq, sk, hq, hkv, hd, dtype, bq, bk):
+    q, k, v = _qkv(jax.random.PRNGKey(0), b, sq, sk, hq, hkv, hd, dtype)
+    got = fa_ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                 block_k=bk, interpret=True)
+    want = fa_ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
+DECODE_CASES = [
+    # (b, s_cache, hq, hkv, hd, length, dtype, block_k)
+    (1, 512, 4, 4, 64, 512, jnp.float32, 128),
+    (2, 1024, 8, 2, 64, 700, jnp.float32, 256),     # partial fill
+    (1, 2048, 4, 1, 128, 1, jnp.float32, 512),      # single valid pos
+    (2, 512, 4, 2, 64, 512, jnp.bfloat16, 128),
+    (1, 640, 4, 4, 32, 300, jnp.float32, 128),      # ragged block count
+]
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,hd,length,dtype,bk", DECODE_CASES)
+def test_decode_attention_matches_ref(b, s, hq, hkv, hd, length, dtype, bk):
+    key = jax.random.PRNGKey(1)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, s, hkv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (b, s, hkv, hd), jnp.float32).astype(dtype)
+    scale = hd ** -0.5
+    got = da_ops.decode_attention(q, k, v, length, scale=scale,
+                                  block_k=bk, interpret=True)
+    want = fa_ref.decode_attention_ref(q, k, v, length, scale=scale)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
+SSD_CASES = [
+    # (b, L, h, p, g, n, chunk, dtype)
+    (1, 256, 2, 64, 1, 64, 64, jnp.float32),
+    (2, 128, 4, 32, 2, 16, 32, jnp.float32),      # grouped B/C
+    (1, 512, 2, 64, 1, 128, 128, jnp.float32),    # mamba2-780m-like
+    (1, 128, 2, 64, 1, 16, 64, jnp.float32),      # jamba-like small state
+    (1, 256, 2, 64, 1, 64, 64, jnp.bfloat16),
+]
+
+
+def _ssd_inputs(key, b, l, h, p, g, n, dtype):
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(
+        jax.random.normal(ks[1], (b, l, h), jnp.float32) - 1.0)
+    a = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.3)
+    bb = jax.random.normal(ks[3], (b, l, g, n), jnp.float32).astype(dtype)
+    cc = jax.random.normal(jax.random.fold_in(key, 9),
+                           (b, l, g, n), jnp.float32).astype(dtype)
+    return x, dt, a, bb, cc
+
+
+@pytest.mark.parametrize("b,l,h,p,g,n,chunk,dtype", SSD_CASES)
+def test_ssd_kernel_matches_ref(b, l, h, p, g, n, chunk, dtype):
+    x, dt, a, bb, cc = _ssd_inputs(jax.random.PRNGKey(2), b, l, h, p, g, n,
+                                   dtype)
+    y_got, s_got = ssd_ops.ssd(x, dt, a, bb, cc, chunk=chunk,
+                               impl="pallas_interpret")
+    y_want, s_want = ssd_ref.ssd_ref(x, dt, a, bb, cc, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_want),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_ssd_initial_state_continuation():
+    """Splitting a sequence in half and carrying the state must equal the
+    full-sequence scan (prefill -> decode continuity)."""
+    b, l, h, p, g, n, chunk = 1, 256, 2, 32, 1, 32, 64
+    x, dt, a, bb, cc = _ssd_inputs(jax.random.PRNGKey(3), b, l, h, p, g, n,
+                                   jnp.float32)
+    y_full, s_full = ssd_ref.ssd_ref(x, dt, a, bb, cc, chunk=chunk)
+    half = l // 2
+    y1, s1 = ssd_knl.ssd_pallas(x[:, :half], dt[:, :half], a, bb[:, :half],
+                                cc[:, :half], chunk=chunk, interpret=True)
+    y2, s2 = ssd_knl.ssd_pallas(x[:, half:], dt[:, half:], a, bb[:, half:],
+                                cc[:, half:], chunk=chunk,
+                                initial_state=s1, interpret=True)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, half:]),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_ref_matches_naive_recurrence():
+    """Chunked oracle vs the literal per-step recurrence."""
+    b, l, h, p, g, n = 1, 64, 2, 16, 1, 16
+    x, dt, a, bb, cc = _ssd_inputs(jax.random.PRNGKey(4), b, l, h, p, g, n,
+                                   jnp.float32)
+    y_ref, s_ref = ssd_ref.ssd_ref(x, dt, a, bb, cc, chunk=16)
+    rep = h // g
+    bh = jnp.repeat(bb, rep, axis=2)
+    ch = jnp.repeat(cc, rep, axis=2)
+    s = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(l):
+        decay = jnp.exp(dt[:, t] * a[None, :])               # [B,H]
+        s = s * decay[..., None, None] + \
+            dt[:, t][..., None, None] * x[:, t][..., :, None] * \
+            bh[:, t][..., None, :]
+        ys.append(jnp.einsum("bhpn,bhn->bhp", s, ch[:, t]))
+    y_naive = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_naive),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s),
+                               atol=1e-4, rtol=1e-4)
