@@ -14,6 +14,7 @@ BENCHES = [
     ("table4", "benchmarks.runtime_overhead"),
     ("table5", "benchmarks.modularity"),
     ("fig15", "benchmarks.elastic_sim"),
+    ("themis", "benchmarks.preemption"),
     ("fig19-21", "benchmarks.single_tenant"),
     ("fig22", "benchmarks.multi_tenant"),
     ("roofline", "benchmarks.roofline"),

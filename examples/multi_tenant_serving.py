@@ -20,7 +20,7 @@ sys.path.insert(0, "src")
 import jax                                                    # noqa: E402
 import numpy as np                                            # noqa: E402
 
-from repro.core import Daemon, Shell, default_registry, \
+from repro.core import Daemon, PolicyConfig, Shell, default_registry, \
     uniform_shell                                             # noqa: E402
 
 
@@ -28,7 +28,10 @@ def main():
     n_dev = jax.device_count()
     spec = uniform_shell(f"host{n_dev}_s{n_dev}", (1, n_dev), n_dev)
     reg = default_registry()
-    daemon = Daemon(Shell(spec), reg)
+    # preemptive priority policy: carol's LM forward is latency-sensitive
+    # (priority 3 + deadline); alice/bob run as best-effort batch work whose
+    # chunks may be evicted and requeued to keep carol inside her SLO
+    daemon = Daemon(Shell(spec), reg, PolicyConfig(preemptive=True))
     print(f"shell: {spec.name} ({n_dev} slots); modules: "
           f"{sorted(reg.modules)}")
 
@@ -44,16 +47,19 @@ def main():
                                           [(re, im)] * 4),
         "bob/sobel": daemon.submit("bob", "sobel", [(img,)] * 4),
         "carol/lm-forward": daemon.submit("carol", "lm-forward",
-                                          [(toks,)] * 2),
+                                          [(toks,)] * 2, priority=3,
+                                          deadline_ms=5000.0),
     }
     for name, h in handles.items():
         outs = h.future.result(timeout=600)
         dt = time.perf_counter() - t0
+        tag = f" (priority={h.priority})" if h.priority else ""
         print(f"  {name}: {len(outs)} chunks done at t={dt:.2f}s "
-              f"(out[0] shape {np.asarray(outs[0]).shape})")
+              f"(out[0] shape {np.asarray(outs[0]).shape}){tag}")
     s = daemon.stats
     print(f"stats: chunks={s['chunks']} reconfigurations="
           f"{s['reconfigurations']} reuses={s['reuses']} "
+          f"preemptions={s['preemptions']} "
           f"scheduler={s['sched_ns'] / max(s['sched_calls'], 1) / 1e3:.0f}"
           f"us/event")
     daemon.shutdown()

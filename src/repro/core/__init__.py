@@ -11,11 +11,12 @@
 - zoo.py        module builders (mandelbrot/sobel/matmul/LM)
 """
 from repro.core.allocator import BuddyAllocator, Range
-from repro.core.daemon import Daemon
+from repro.core.daemon import Daemon, JobHandle
 from repro.core.registry import ImplAlt, ModuleDescriptor, Registry
-from repro.core.scheduler import PolicyConfig, SchedulerState
+from repro.core.scheduler import Assignment, PolicyConfig, Request, \
+    SchedulerState
 from repro.core.shell import Shell, ShellSpec, SlotSpec, uniform_shell
-from repro.core.simulator import SimJob, simulate
+from repro.core.simulator import SimJob, SimResult, simulate
 
 
 def default_registry() -> Registry:

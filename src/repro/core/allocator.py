@@ -42,12 +42,17 @@ class BuddyAllocator:
             size *= 2
         return best
 
+    def aligned_starts(self, size: int) -> range:
+        """Start indices of every size-aligned window (the only placeable
+        positions); shared by find() and the scheduler's preemption scan."""
+        return range(0, self.n - size + 1, size)
+
     def find(self, size: int) -> Range | None:
         """Smallest-index aligned free run of `size` slots."""
         assert size >= 1 and (size & (size - 1)) == 0
         if size > self.n:
             return None
-        for start in range(0, self.n - size + 1, size):
+        for start in self.aligned_starts(size):
             if all(i not in self.busy for i in range(start, start + size)):
                 return Range(start, size)
         return None

@@ -7,6 +7,14 @@ front-end bolts onto `submit` unchanged) and zero-copy array handoff.
 Execution model: a scheduler thread applies the resource-elastic policy on
 every event; each assignment runs on its slot through a worker pool (XLA
 dispatch is per-device-set, so distinct slots execute concurrently).
+
+Preemption (PolicyConfig.preemptive): when the policy evicts an in-flight
+chunk, the daemon cancels the victim assignment — if its worker has not
+started, it is skipped outright; if it is mid-dispatch, its result is
+discarded on completion (the FPGA analogue: reconfiguring a PR region
+kills the resident accelerator's partial work).  Either way the scheduler
+has already requeued the chunk, so it re-runs under a fresh assignment and
+the request's future still resolves with every chunk exactly once.
 """
 from __future__ import annotations
 
@@ -26,11 +34,18 @@ from repro.core.scheduler import Assignment, PolicyConfig, SchedulerState
 from repro.core.shell import Shell
 
 
+def _now_ms() -> float:
+    """Scheduler clock: milliseconds (matches the cost model's units)."""
+    return time.perf_counter() * 1e3
+
+
 @dataclasses.dataclass
 class JobHandle:
     rid: int
     future: Future          # resolves to list of chunk outputs
     t_submit: float
+    priority: int = 0
+    deadline_ms: float | None = None
 
 
 class Daemon:
@@ -45,31 +60,39 @@ class Daemon:
         self._lock = threading.Lock()
         self._results: dict[int, list] = {}
         self._handles: dict[int, JobHandle] = {}
+        self._cancelled: set[int] = set()     # aids of preempted assignments
         self._pool = ThreadPoolExecutor(max_workers=max_workers)
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self.stats = {"reconfigurations": 0, "reuses": 0, "chunks": 0,
-                      "sched_ns": 0, "sched_calls": 0}
+                      "preemptions": 0, "sched_ns": 0, "sched_calls": 0}
         self._thread.start()
 
     # -- public API (paper Listings 4/5) --------------------------------------
 
     def run(self, tenant: str, jobs: list[dict]) -> list[JobHandle]:
-        """jobs: [{"name": <module>, "chunks": [args...]}] -> handles."""
+        """jobs: [{"name": <module>, "chunks": [args...],
+                   "priority"?: int, "deadline_ms"?: float}] -> handles."""
         handles = []
         for j in jobs:
-            handles.append(self.submit(tenant, j["name"], j["chunks"]))
+            handles.append(self.submit(tenant, j["name"], j["chunks"],
+                                       priority=j.get("priority", 0),
+                                       deadline_ms=j.get("deadline_ms")))
         return handles
 
-    def submit(self, tenant: str, module: str, chunks: list) -> JobHandle:
+    def submit(self, tenant: str, module: str, chunks: list,
+               priority: int = 0,
+               deadline_ms: float | None = None) -> JobHandle:
         self.registry.module(module)   # validates
         fut: Future = Future()
         with self._lock:
             req = self.state.submit(tenant, module, len(chunks),
-                                    payloads=list(chunks),
-                                    now=time.perf_counter())
+                                    payloads=list(chunks), now=_now_ms(),
+                                    priority=priority,
+                                    deadline_ms=deadline_ms)
             self._results[req.rid] = [None] * len(chunks)
-            h = JobHandle(req.rid, fut, time.perf_counter())
+            h = JobHandle(req.rid, fut, time.perf_counter(),
+                          priority=priority, deadline_ms=deadline_ms)
             self._handles[req.rid] = h
         self._events.put(("submit", None))
         return h
@@ -83,25 +106,34 @@ class Daemon:
     # -- module management -----------------------------------------------------
 
     def _module(self, name: str) -> AccelModule:
-        if name not in self._modules:
+        with self._lock:
+            mod = self._modules.get(name)
+        if mod is None:
             desc = self.registry.module(name)
             builder = desc.load_builder()
-            self._modules[name] = AccelModule(name, builder,
-                                              desc.footprints)
-        return self._modules[name]
+            mod = AccelModule(name, builder, desc.footprints)
+            with self._lock:
+                mod = self._modules.setdefault(name, mod)
+        return mod
 
     def _placement(self, a: Assignment) -> Placement:
         key = (a.rng.start, a.rng.size)
-        pl = self._placements.get(key)
-        if pl is not None and pl.module.name == a.module and not a.reconfigure:
-            self.stats["reuses"] += 1
-            return pl
+        with self._lock:
+            pl = self._placements.get(key)
+            if pl is not None and pl.module.name == a.module \
+                    and not a.reconfigure:
+                self.stats["reuses"] += 1
+                return pl
         mod = self._module(a.module)
         slot = (self.shell.slots[a.rng.start] if a.rng.size == 1 else
                 self.shell.merged_slot(list(a.rng.slots)))
         pl = mod.place(slot, a.footprint)
-        self._placements[key] = pl
-        self.stats["reconfigurations"] += 1
+        with self._lock:
+            # a preempted victim mid-dispatch must not clobber the
+            # placement its preemptor just installed on the same range
+            if a.aid in self.state.active:
+                self._placements[key] = pl
+                self.stats["reconfigurations"] += 1
         return pl
 
     # -- event loop -------------------------------------------------------------
@@ -120,13 +152,40 @@ class Daemon:
                 pass
             with self._lock:
                 t0 = time.perf_counter_ns()
-                assignments = self.state.schedule()
+                assignments = self.state.schedule(now=_now_ms())
+                self._handle_preempted_locked()
                 self.stats["sched_ns"] += time.perf_counter_ns() - t0
                 self.stats["sched_calls"] += 1
             for a in assignments:
                 self._pool.submit(self._run_assignment, a)
 
+    def _handle_preempted_locked(self) -> None:
+        for v in self.state.drain_preempted():
+            self._cancelled.add(v.aid)
+            self.stats["preemptions"] += 1
+            # a failed request whose last in-flight chunk was evicted
+            # drains here rather than through complete()
+            self._finalize_locked(v.rid)
+
+    def _finalize_locked(self, rid: int) -> None:
+        """Release per-request state once a request has fully drained."""
+        req = self.state.requests.get(rid)
+        if req is None or not req.finished:
+            return
+        self._handles.pop(rid, None)
+        self._results.pop(rid, None)
+        # keep the Request record (stats/queries) but release the input
+        # arrays — a long-running daemon must not accumulate every
+        # tenant's payloads
+        req.payloads = None
+
     def _run_assignment(self, a: Assignment):
+        with self._lock:
+            if a.aid in self._cancelled:   # preempted before we started
+                self._cancelled.discard(a.aid)
+                self._finalize_locked(a.rid)
+                self._events.put(("cancelled", None))
+                return
         try:
             pl = self._placement(a)
             req = self.state.requests[a.rid]
@@ -140,14 +199,29 @@ class Daemon:
         except Exception as e:  # noqa: BLE001 - propagate to the future
             out, err = None, e
         with self._lock:
+            self._cancelled.discard(a.aid)
+            if not self.state.complete(a, now=_now_ms()):
+                # preempted mid-dispatch: discard the partial result; the
+                # chunk was requeued and re-runs under a fresh assignment
+                self._finalize_locked(a.rid)
+                self._events.put(("discarded", None))
+                return
             self.stats["chunks"] += 1
-            self.state.complete(a, now=time.perf_counter())
             req = self.state.requests[a.rid]
-            if err is None:
-                self._results[a.rid][a.chunk] = out
-            h = self._handles[a.rid]
-            if err is not None and not h.future.done():
-                h.future.set_exception(err)
-            elif req.complete and not h.future.done():
-                h.future.set_result(self._results.pop(a.rid))
+            h = self._handles.get(a.rid)
+            if err is not None:
+                # abort the rest of the request and surface the error once;
+                # drop per-request buffers so a failing chunk leaves no
+                # orphaned state behind
+                self.state.abort(a.rid)
+                self._results.pop(a.rid, None)
+                if h is not None and not h.future.done():
+                    h.future.set_exception(err)
+            else:
+                buf = self._results.get(a.rid)
+                if buf is not None:
+                    buf[a.chunk] = out
+                if req.complete and h is not None and not h.future.done():
+                    h.future.set_result(self._results.pop(a.rid))
+            self._finalize_locked(a.rid)
         self._events.put(("done", None))

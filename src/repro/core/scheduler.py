@@ -3,13 +3,26 @@
 Pure policy core, shared by the discrete-event simulator (tests, Fig-15
 benchmark) and the live daemon executor:
 
-  - round-robin between tenants at acceleration-request granularity;
+  - weighted priority scheduling between tenants at acceleration-request
+    granularity (equal priorities degrade to least-recently-served
+    round robin, the paper's Fig-14 policy);
   - each request carries independent data-parallel *chunks* (work-groups);
   - module REPLICATION: chunks of one request run on many slots;
   - module REPLACEMENT: when adjacent slots are free, a bigger
     implementation alternative is placed on the merged range;
   - REUSE: a range still hosting the right module skips reconfiguration;
-  - cooperative run-to-completion at chunk granularity.
+  - PREEMPTION (THEMIS-style): a high-priority arrival may evict the
+    lowest-priority resident chunk mid-flight; the victim chunk is
+    requeued and the preemptor pays the modeled reconfiguration penalty.
+
+Priority model: each request carries an integer `priority` (higher wins)
+and an optional relative `deadline_ms`.  The effective priority ages by
+one level per `starvation_bound_ms` of queueing delay, so low-priority
+tenants can be delayed at most `(gap + 1) * starvation_bound_ms` behind a
+saturating higher-priority stream.  Ties break earliest-deadline-first,
+then least-recently-served round robin.  The scheduler clock is in
+milliseconds (the simulator's virtual clock; the daemon feeds
+`time.perf_counter() * 1e3`).
 """
 from __future__ import annotations
 
@@ -29,14 +42,33 @@ class Request:
     module: str
     n_chunks: int
     payloads: list | None = None          # live mode: per-chunk args
-    issued: int = 0                       # chunks handed to slots
+    priority: int = 0                     # higher wins
+    deadline_ms: float | None = None      # relative to t_submit
     done: int = 0
     t_submit: float = 0.0
     t_finish: float | None = None
+    t_last_served: float | None = None    # last chunk issue (aging anchor)
+    preemptions: int = 0                  # chunks evicted mid-flight
+    failed: bool = False                  # aborted after a chunk error
+
+    def __post_init__(self):
+        # chunk ids not yet issued; preempted chunks return to the front
+        self._chunks: deque[int] = deque(range(self.n_chunks))
+
+    def next_chunk(self) -> int:
+        return self._chunks.popleft()
+
+    def requeue_chunk(self, chunk: int) -> None:
+        self._chunks.appendleft(chunk)
+        self.preemptions += 1
 
     @property
     def pending(self) -> int:
-        return self.n_chunks - self.issued
+        return 0 if self.failed else len(self._chunks)
+
+    @property
+    def issued(self) -> int:
+        return self.n_chunks - len(self._chunks)
 
     @property
     def outstanding(self) -> int:
@@ -45,6 +77,17 @@ class Request:
     @property
     def complete(self) -> bool:
         return self.done >= self.n_chunks
+
+    @property
+    def finished(self) -> bool:
+        """Complete, or aborted with no chunks still in flight."""
+        return self.complete or (self.failed and self.outstanding == 0)
+
+    @property
+    def deadline_at(self) -> float:
+        if self.deadline_ms is None:
+            return float("inf")
+        return self.t_submit + self.deadline_ms
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +98,11 @@ class Assignment:
     footprint: int
     rng: Range
     reconfigure: bool                     # False -> reused resident module
+    aid: int = -1                         # unique per issued assignment
+    # effective priority at placement time: a chunk defends itself at the
+    # level it won the slot with (aging resets on service, so a starved
+    # request's hard-earned promotion must not evaporate mid-chunk)
+    eff: int = 0
 
 
 @dataclasses.dataclass
@@ -65,6 +113,12 @@ class PolicyConfig:
     # estimated reconfiguration cost relative to a chunk (cost model)
     reconfig_penalty_ms: float = 5.0
     elastic: bool = True                  # False -> fixed 1-slot scheduling
+    preemptive: bool = False              # allow chunk-granularity eviction
+    # aging: each full bound of queueing delay buys one priority level
+    starvation_bound_ms: float = 100.0
+    # evict only when the preemptor outranks the victim by at least this
+    # many effective-priority levels (prevents same-class thrash)
+    preempt_margin: int = 1
 
 
 class SchedulerState:
@@ -79,21 +133,54 @@ class SchedulerState:
         self.resident: dict[tuple[int, int], tuple[str, int]] = {}
         #        (start, size) -> (module, footprint) for idle ranges too
         self.requests: dict[int, Request] = {}
+        self.active: dict[int, Assignment] = {}       # aid -> in-flight
+        self.n_preemptions = 0
+        self._preempted: list[Assignment] = []        # drained by executor
         self._rid = itertools.count()
+        self._aid = itertools.count()
+        self._now = 0.0
 
     # -- queue management -----------------------------------------------------
 
     def submit(self, tenant: str, module: str, n_chunks: int,
-               payloads=None, now: float = 0.0) -> Request:
+               payloads=None, now: float = 0.0, priority: int = 0,
+               deadline_ms: float | None = None) -> Request:
         rid = next(self._rid)
         req = Request(rid, tenant, module, n_chunks, payloads,
+                      priority=priority, deadline_ms=deadline_ms,
                       t_submit=now)
         self.requests[rid] = req
+        self._now = max(self._now, now)
         if tenant not in self.queues:
             self.queues[tenant] = deque()
             self._served_at.setdefault(tenant, -1)
         self.queues[tenant].append(req)
         return req
+
+    def abort(self, rid: int) -> None:
+        """Drop a request's unissued chunks (called after a chunk error).
+
+        In-flight chunks still drain through `complete`; once none remain
+        the request is popped from its tenant queue so the tenant is not
+        head-of-line blocked by a dead request.
+        """
+        req = self.requests.get(rid)
+        if req is None or req.finished:
+            return
+        req.failed = True
+        self._pop_finished(req)
+
+    def _pop_finished(self, req: Request) -> None:
+        """Unblock the tenant queue once a request has fully drained.
+        Requests can finish out of FIFO order (priorities), so remove by
+        identity, not just at the head."""
+        if req.finished:
+            q = self.queues.get(req.tenant)
+            if q is not None:
+                try:
+                    q.remove(req)
+                except ValueError:
+                    pass
 
     def _eligible(self, req: Request) -> bool:
         if req.pending <= 0:
@@ -104,18 +191,61 @@ class SchedulerState:
             return False
         return True
 
-    def _tenants_pending(self) -> list[str]:
-        return [t for t, q in self.queues.items()
-                if q and self._eligible(q[0])]
+    def _best_request(self, tenant: str,
+                      now: float | None = None) -> Optional[Request]:
+        """The tenant request the policy would serve next.
 
-    def _next_request(self) -> Optional[Request]:
-        """Round-robin across tenants at request granularity (paper Fig 14):
-        the least-recently-served pending tenant goes next."""
-        pending = self._tenants_pending()
-        if not pending:
+        Elastic mode honors per-request priority/deadline anywhere in the
+        tenant's queue (an urgent submit overtakes the same tenant's own
+        earlier batch work); fixed mode keeps the paper's strict per-tenant
+        FIFO so the Fig-15 baseline semantics are unchanged.
+        """
+        now = self._now if now is None else now
+        q = self.queues.get(tenant)
+        if not q:
             return None
-        t = min(pending, key=lambda t: self._served_at[t])
-        return self.queues[t][0]
+        if not self.policy.elastic:
+            return q[0] if self._eligible(q[0]) else None
+        best, bestk = None, None
+        for r in q:
+            if not self._eligible(r):
+                continue
+            k = (-self.effective_priority(r, now), r.deadline_at, r.rid)
+            if best is None or k < bestk:
+                best, bestk = r, k
+        return best
+
+    def _pick(self, now: float) -> tuple[Optional[Request], int]:
+        """One pass over the tenant queues: the request to serve next
+        (highest effective priority, then earliest deadline, then
+        least-recently-served tenant — paper Fig 14 when neither is set)
+        and the number of contending tenants (the _choose fairness flag).
+        """
+        best, best_key, contending = None, None, 0
+        for t in self.queues:
+            r = self._best_request(t, now)
+            if r is None:
+                continue
+            contending += 1
+            k = (-self.effective_priority(r, now), r.deadline_at,
+                 self._served_at[t])
+            if best_key is None or k < best_key:
+                best, best_key = r, k
+        return best, contending
+
+    # -- priority model --------------------------------------------------------
+
+    def effective_priority(self, req: Request, now: float | None = None) -> int:
+        """Base priority plus starvation aging: one level per bound of
+        *queueing* delay — the clock resets whenever the request is served,
+        so continuously-served work does not age into out-ranking fresh
+        high-priority arrivals."""
+        now = self._now if now is None else now
+        since = req.t_submit if req.t_last_served is None \
+            else max(req.t_submit, req.t_last_served)
+        waited = max(0.0, now - since)
+        bound = max(self.policy.starvation_bound_ms, 1e-9)
+        return req.priority + int(waited // bound)
 
     def _advance_rr(self, tenant: str) -> None:
         self._served_at[tenant] = self._serve_seq
@@ -125,13 +255,14 @@ class SchedulerState:
 
     def _n_free_ranges(self, size: int) -> int:
         n = 0
-        for start in range(0, self.alloc.n, size):
+        for start in self.alloc.aligned_starts(size):
             if all(i not in self.alloc.busy
                    for i in range(start, start + size)):
                 n += 1
         return n
 
-    def _choose(self, req: Request) -> tuple[int, Range, bool] | None:
+    def _choose(self, req: Request,
+                multi_tenant: bool = False) -> tuple[int, Range, bool] | None:
         """Cost-model choice of implementation alternative + range.
 
         Rate model: serving min(pending, n_free_ranges(fp)) chunks
@@ -147,7 +278,6 @@ class SchedulerState:
             fps = [f for f in fps if f == min(desc.footprints)]
         if not fps:
             return None
-        multi_tenant = len(self._tenants_pending()) > 1
         if multi_tenant or not self.policy.upsize_when_idle:
             # fairness first: smallest footprint, but still reuse if free
             fps = [min(fps)]
@@ -185,14 +315,98 @@ class SchedulerState:
             return None
         return best[2], best[3], best[4]
 
-    def schedule(self) -> list[Assignment]:
-        """Fill free slots with chunks; called on every event."""
+    # -- preemption -------------------------------------------------------------
+
+    def _preempt_for(self, req: Request, now: float,
+                     exclude: set[int] = frozenset()) -> bool:
+        """Make room for `req`'s smallest implementation alternative by
+        evicting in-flight chunks.  Considers each aligned window the
+        allocator could place into and evicts only the victims occupying
+        the cheapest feasible window — no assignment loses work unless its
+        slots are part of the window the preemptor actually gets.
+        """
+        desc = self.registry.module(req.module)
+        need = min(desc.footprints)
+        if need > self.alloc.n:
+            return False
+        eff = self.effective_priority(req, now)
+        # a margin below 1 would let equal-priority requests evict each
+        # other endlessly within one schedule() pass; clamp it
+        margin = max(1, self.policy.preempt_margin)
+
+        def evictable(a: Assignment) -> bool:
+            # `exclude` holds assignments issued in the current schedule()
+            # pass: aging resets on service, so without it a request served
+            # moments ago could be evicted at the same instant it was
+            # placed (zero-time churn, and the executor never saw it).
+            # A chunk defends at the effective priority it was placed
+            # with — NOT its current aged value, which for an in-flight
+            # chunk measures *service* time and would grant long chunks
+            # growing immunity to exactly the preemption they should face.
+            return (a.rid != req.rid and a.aid not in exclude
+                    and a.eff + margin <= eff)
+
+        by_slot: dict[int, Assignment] = {}
+        for a in self.active.values():
+            for i in a.rng.slots:
+                by_slot[i] = a
+        best = None  # ((max victim eff, n victims, -newest aid), victims)
+        for start in self.alloc.aligned_starts(need):
+            victims: dict[int, Assignment] = {}
+            feasible = True
+            for i in range(start, start + need):
+                if i not in self.alloc.busy:
+                    continue
+                a = by_slot.get(i)
+                if a is None or not evictable(a):
+                    feasible = False
+                    break
+                victims[a.aid] = a
+            if not feasible or not victims:
+                continue   # window blocked, or free (then _choose had it)
+            cost = (max(a.eff for a in victims.values()),
+                    len(victims),
+                    -max(victims))     # prefer newest chunks: least sunk work
+            if best is None or cost < best[0]:
+                best = (cost, list(victims.values()))
+        if best is None:
+            return False
+        for a in best[1]:
+            del self.active[a.aid]
+            self.alloc.free(a.rng)
+            victim = self.requests[a.rid]
+            victim.requeue_chunk(a.chunk)
+            # an aborted request whose last in-flight chunk just got
+            # evicted drains here, not via complete()
+            self._pop_finished(victim)
+            self._preempted.append(a)
+            self.n_preemptions += 1
+        return True
+
+    def drain_preempted(self) -> list[Assignment]:
+        """Victim assignments since the last drain; the executor must cancel
+        them (their ranges are already freed and their chunks requeued)."""
+        out, self._preempted = self._preempted, []
+        return out
+
+    # -- scheduling -------------------------------------------------------------
+
+    def schedule(self, now: float | None = None) -> list[Assignment]:
+        """Fill free slots with chunks; called on every event.  Preemption
+        victims (if any) are reported through `drain_preempted()`."""
+        now = self._now if now is None else max(self._now, now)
+        self._now = now
         out = []
+        placed: set[int] = set()
         while True:
-            req = self._next_request()
+            req, contending = self._pick(now)
             if req is None:
                 break
-            choice = self._choose(req)
+            multi_tenant = contending > 1
+            choice = self._choose(req, multi_tenant)
+            if choice is None and self.policy.preemptive \
+                    and self._preempt_for(req, now, exclude=placed):
+                choice = self._choose(req, multi_tenant)
             if choice is None:
                 break
             fp, rng, reconf = choice
@@ -203,18 +417,28 @@ class SchedulerState:
                                 or rng.start + rng.size <= k[0])]:
                 del self.resident[key]
             self.resident[(rng.start, rng.size)] = (req.module, fp)
-            out.append(Assignment(req.rid, req.issued, req.module, fp,
-                                  rng, reconf))
-            req.issued += 1
+            a = Assignment(req.rid, req.next_chunk(), req.module, fp,
+                           rng, reconf, aid=next(self._aid),
+                           eff=self.effective_priority(req, now))
+            self.active[a.aid] = a
+            out.append(a)
+            placed.add(a.aid)
+            req.t_last_served = now
             self._advance_rr(req.tenant)
         return out
 
-    def complete(self, a: Assignment, now: float = 0.0) -> None:
+    def complete(self, a: Assignment, now: float = 0.0) -> bool:
+        """Record a finished chunk.  Returns False (a no-op) when the
+        assignment was preempted before completion — the executor must then
+        discard the result; the chunk re-runs under a fresh assignment."""
+        if a.aid not in self.active:
+            return False
+        del self.active[a.aid]
         self.alloc.free(a.rng)
+        self._now = max(self._now, now)
         req = self.requests[a.rid]
         req.done += 1
         if req.complete:
             req.t_finish = now
-            q = self.queues[req.tenant]
-            if q and q[0].rid == a.rid:
-                q.popleft()
+        self._pop_finished(req)
+        return True

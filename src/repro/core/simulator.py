@@ -2,16 +2,32 @@
 
 Drives the exact SchedulerState policy with a virtual clock and the
 registry's cost model; used by property tests and by the Fig.-15 benchmark
-(elastic vs fixed-module scheduling: utilization / makespan / latency).
+(elastic vs fixed-module scheduling: utilization / makespan / latency) as
+well as the THEMIS-style preemption benchmark (benchmarks/preemption.py).
+
+Preemption semantics: when the policy evicts an in-flight chunk, the
+victim's occupancy is truncated at the eviction instant (the partial work
+is discarded — it still counts as slot occupancy, not as goodput), the
+chunk is requeued, and its original completion event becomes a stale no-op.
+Every submitted chunk therefore still completes exactly once.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Iterable
 
 from repro.core.registry import Registry
 from repro.core.scheduler import Assignment, PolicyConfig, SchedulerState
+
+
+def p95(latencies: list[float]) -> float:
+    """p95 over a list of latencies (nearest-rank); 0.0 when empty."""
+    if not latencies:
+        return 0.0
+    lat = sorted(latencies)
+    return lat[max(0, math.ceil(0.95 * len(lat)) - 1)]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -20,6 +36,8 @@ class SimJob:
     tenant: str
     module: str
     n_chunks: int
+    priority: int = 0
+    deadline_ms: float | None = None
 
 
 @dataclasses.dataclass
@@ -29,11 +47,49 @@ class SimResult:
     reconfigurations: int
     request_latency: dict[int, float]   # rid -> finish - submit
     timeline: list                      # (t_start, t_end, slot_range, rid)
+    preemptions: int = 0
+    # truncated spans of evicted chunks: (t_start, t_evict, slot_range, rid)
+    preempted_spans: list = dataclasses.field(default_factory=list)
+    wasted_time: float = 0.0            # slot-time of discarded partial work
+    # rid -> {"tenant", "priority", "deadline_ms", "n_chunks"}
+    request_meta: dict[int, dict] = dataclasses.field(default_factory=dict)
+    n_slots: int = 1
 
     @property
     def mean_latency(self) -> float:
         lat = list(self.request_latency.values())
         return sum(lat) / len(lat) if lat else 0.0
+
+    def latencies(self, priority: int | None = None) -> list[float]:
+        return sorted(
+            l for rid, l in self.request_latency.items()
+            if priority is None
+            or self.request_meta[rid]["priority"] == priority)
+
+    def p95_latency(self, priority: int | None = None) -> float:
+        return p95(self.latencies(priority))
+
+    def deadline_misses(self) -> int:
+        n = 0
+        for rid, lat in self.request_latency.items():
+            dl = self.request_meta[rid]["deadline_ms"]
+            if dl is not None and lat > dl + 1e-9:
+                n += 1
+        return n
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        with_dl = sum(1 for m in self.request_meta.values()
+                      if m["deadline_ms"] is not None)
+        return self.deadline_misses() / with_dl if with_dl else 0.0
+
+    @property
+    def useful_utilization(self) -> float:
+        """Utilization counting only work that was not later discarded."""
+        if self.makespan <= 0 or self.utilization <= 0:
+            return 0.0
+        return self.utilization - self.wasted_time / (
+            self.makespan * max(1, self.n_slots))
 
 
 def chunk_time_ms(registry: Registry, a: Assignment,
@@ -58,31 +114,58 @@ def simulate(registry: Registry, n_slots: int, jobs: Iterable[SimJob],
 
     now = 0.0
     busy_time = 0.0
+    wasted_time = 0.0
     reconfs = 0
     timeline = []
+    preempted_spans = []
+    starts: dict[int, float] = {}       # aid -> dispatch time
+    meta: dict[int, dict] = {}
 
     def dispatch(t0: float):
-        nonlocal seq, busy_time, reconfs
-        for a in state.schedule():
+        nonlocal seq, busy_time, wasted_time, reconfs
+        new = state.schedule(now=t0)
+        for v in state.drain_preempted():
+            ts = starts.pop(v.aid)
+            busy_time += (t0 - ts) * v.rng.size
+            wasted_time += (t0 - ts) * v.rng.size
+            preempted_spans.append((ts, t0, (v.rng.start, v.rng.size),
+                                    v.rid))
+        for a in new:
             dt = chunk_time_ms(registry, a, policy)
             if a.reconfigure:
                 reconfs += 1
-            busy_time += dt * a.rng.size
-            timeline.append((t0, t0 + dt, (a.rng.start, a.rng.size), a.rid))
+            starts[a.aid] = t0
             heapq.heappush(events, (t0 + dt, seq, "done", a))
             seq += 1
 
     while events:
         now, _, kind, obj = heapq.heappop(events)
         if kind == "arrive":
-            state.submit(obj.tenant, obj.module, obj.n_chunks, now=now)
+            req = state.submit(obj.tenant, obj.module, obj.n_chunks,
+                               now=now, priority=obj.priority,
+                               deadline_ms=obj.deadline_ms)
+            meta[req.rid] = {"tenant": obj.tenant,
+                             "priority": obj.priority,
+                             "deadline_ms": obj.deadline_ms,
+                             "n_chunks": obj.n_chunks}
         else:
-            state.complete(obj, now=now)
+            if not state.complete(obj, now=now):
+                continue                 # stale event for a preempted chunk
+            ts = starts.pop(obj.aid)
+            busy_time += (now - ts) * obj.rng.size
+            timeline.append((ts, now, (obj.rng.start, obj.rng.size),
+                             obj.rid))
         dispatch(now)
 
     assert all(r.complete for r in state.requests.values()), \
         "simulator finished with incomplete requests"
+    assert not state.alloc.busy, "simulator finished with busy slots"
+    assert not state.active, "simulator finished with in-flight chunks"
     lat = {rid: r.t_finish - r.t_submit
            for rid, r in state.requests.items()}
     util = busy_time / (now * state.alloc.n) if now > 0 else 0.0
-    return SimResult(now, util, reconfs, lat, timeline)
+    return SimResult(now, util, reconfs, lat, timeline,
+                     preemptions=state.n_preemptions,
+                     preempted_spans=preempted_spans,
+                     wasted_time=wasted_time, request_meta=meta,
+                     n_slots=state.alloc.n)

@@ -77,6 +77,39 @@ def test_bus_adaptor_pads_and_casts(daemon):
     assert np.asarray(out).shape == (256, 256)
 
 
+def test_failing_chunk_leaves_no_orphaned_state(daemon):
+    """Regression: a request resolved via set_exception used to leave its
+    entry in `_results` (and its tenant queue head-of-line blocked) forever.
+    A failing chunk must abort the request, drop all per-request state, and
+    leave the scheduler consistent for subsequent work."""
+    import time
+    # oversize tiles violate the bus adaptor's signature check -> chunk error
+    bad = (np.zeros((512, 512), np.float32),
+           np.zeros((512, 512), np.float32))
+    h = daemon.submit("erin", "mandelbrot", [bad, bad])
+    with pytest.raises(AssertionError):
+        h.future.result(timeout=120)
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        with daemon._lock:
+            req = daemon.state.requests[h.rid]
+            if req.finished and not daemon.state.alloc.busy:
+                break
+        time.sleep(0.05)
+    with daemon._lock:
+        assert h.rid not in daemon._results, "orphaned results buffer"
+        assert h.rid not in daemon._handles, "orphaned handle"
+        req = daemon.state.requests[h.rid]
+        assert req.failed and req.finished
+        assert not any(r.rid == h.rid for q in daemon.state.queues.values()
+                       for r in q), "dead request still queued"
+        assert not daemon.state.alloc.busy and not daemon.state.active
+    # scheduler stays consistent: the same tenant can submit again
+    re, im = _mandel_inputs(seed=9)
+    h2 = daemon.submit("erin", "mandelbrot", [(re, im)])
+    assert len(h2.future.result(timeout=120)) == 1
+
+
 def test_registry_roundtrip(tmp_path):
     reg = default_registry()
     reg.save(tmp_path)
