@@ -20,6 +20,7 @@ of discarded work at the highest interactive rates.
 from __future__ import annotations
 
 import random
+import sys
 
 from benchmarks.common import row
 from repro.core import ImplAlt, ModuleDescriptor, PolicyConfig, Registry, \
@@ -47,17 +48,18 @@ def _registry() -> Registry:
     return reg
 
 
-def trace(inter_period_ms: float, rng: random.Random) -> list[SimJob]:
+def trace(inter_period_ms: float, rng: random.Random,
+          horizon_ms: float = HORIZON_MS) -> list[SimJob]:
     """Batch background load + Poisson-ish interactive arrivals."""
     jobs = []
     for tenant in ("batch0", "batch1"):
         t = 0.0
-        while t < HORIZON_MS:
+        while t < horizon_ms:
             jobs.append(SimJob(t, tenant, "batch",
                                rng.randint(3, 6)))
             t += rng.uniform(80.0, 220.0)
     t = rng.uniform(0.0, inter_period_ms)
-    while t < HORIZON_MS:
+    while t < horizon_ms:
         jobs.append(SimJob(t, "live", "inter", 1, priority=PRIORITY_HI,
                            deadline_ms=DEADLINE_MS))
         t += rng.expovariate(1.0 / inter_period_ms)
@@ -70,11 +72,14 @@ def jain(xs: list[float]) -> float:
     return (sum(xs) ** 2) / (len(xs) * sum(x * x for x in xs))
 
 
-def main() -> list[str]:
+def main(quick: bool = False) -> list[str]:
+    """`quick` shrinks the trace for the CI benchmarks-smoke job."""
     reg = _registry()
+    horizon = 400.0 if quick else HORIZON_MS
+    periods = (40.0,) if quick else (40.0, 20.0, 10.0)
     rows = []
-    for period in (40.0, 20.0, 10.0):
-        jobs = trace(period, random.Random(0))
+    for period in periods:
+        jobs = trace(period, random.Random(0), horizon_ms=horizon)
         res = {}
         policies = (
             ("coop", PolicyConfig(preemptive=False,
@@ -117,4 +122,4 @@ def main() -> list[str]:
 
 
 if __name__ == "__main__":
-    main()
+    main(quick="--quick" in sys.argv[1:])

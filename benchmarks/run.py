@@ -15,6 +15,7 @@ BENCHES = [
     ("table5", "benchmarks.modularity"),
     ("fig15", "benchmarks.elastic_sim"),
     ("themis", "benchmarks.preemption"),
+    ("multi_shell", "benchmarks.multi_shell"),
     ("fig19-21", "benchmarks.single_tenant"),
     ("fig22", "benchmarks.multi_tenant"),
     ("roofline", "benchmarks.roofline"),

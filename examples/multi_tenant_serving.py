@@ -1,16 +1,24 @@
-"""End-to-end driver: FOS multi-tenant acceleration service.
+"""End-to-end driver: FOS multi-tenant acceleration over a fabric.
 
 The paper's core scenario (section 5.5.2): mutually-unaware tenants submit
 batched acceleration requests for *different* accelerators — an LM forward
 (the "C accelerator"), mandelbrot (compute-bound) and sobel (memory-bound)
-— and the resource-elastic daemon time/space-multiplexes them over the
-shell's slots, replicating and reusing modules as load allows.
+— and the resource-elastic policy time/space-multiplexes them over the
+fabric's shells, replicating and reusing modules as load allows.
+
+This is the Fabric-API port: shells are registered descriptors, the
+fabric (a list of shell names) is itself a registered descriptor
+(`fabrics.json`), and the daemon executes over all shells with
+locality-aware placement and cross-shell work stealing — alice pins her
+batch work to one shell with `affinity=`, and when the other shell goes
+idle it steals her queued chunks.
 
     PYTHONPATH=src python examples/multi_tenant_serving.py
 
-Runs on the default 1-device view (single-slot shell -> pure
+Runs on the default 1-device view (single-shell fabric -> pure
 time-multiplexing).  Set XLA_FLAGS=--xla_force_host_platform_device_count=4
-before running to watch spatial multiplexing over a 4-slot shell.
+before running to watch a two-shell fabric with spatial multiplexing and
+stealing.
 """
 import sys
 import time
@@ -20,20 +28,41 @@ sys.path.insert(0, "src")
 import jax                                                    # noqa: E402
 import numpy as np                                            # noqa: E402
 
-from repro.core import Daemon, PolicyConfig, Shell, default_registry, \
-    uniform_shell                                             # noqa: E402
+from repro.core import Daemon, FabricDescriptor, PolicyConfig, Shell, \
+    default_registry, uniform_shell                           # noqa: E402
+
+
+def build_shells(reg):
+    """Split the device view into a two-shell fabric when it is big
+    enough; fall back to the degenerate one-shell fabric on 1 device."""
+    devs = jax.devices()
+    n_dev = len(devs)
+    if n_dev >= 2:
+        half = n_dev // 2
+        spec_a = uniform_shell("shellA", (1, half), half)
+        spec_b = uniform_shell("shellB", (1, n_dev - half), n_dev - half)
+        shells = {"shellA": Shell(spec_a, devs[:half]),
+                  "shellB": Shell(spec_b, devs[half:])}
+    else:
+        spec_a = uniform_shell("shellA", (1, 1), 1)
+        shells = {"shellA": Shell(spec_a, devs)}
+    for sh in shells.values():
+        reg.register_shell(sh.spec)
+    reg.register_fabric(FabricDescriptor("example", tuple(shells)))
+    return shells
 
 
 def main():
-    n_dev = jax.device_count()
-    spec = uniform_shell(f"host{n_dev}_s{n_dev}", (1, n_dev), n_dev)
     reg = default_registry()
+    shells = build_shells(reg)
     # preemptive priority policy: carol's LM forward is latency-sensitive
     # (priority 3 + deadline); alice/bob run as best-effort batch work whose
-    # chunks may be evicted and requeued to keep carol inside her SLO
-    daemon = Daemon(Shell(spec), reg, PolicyConfig(preemptive=True))
-    print(f"shell: {spec.name} ({n_dev} slots); modules: "
-          f"{sorted(reg.modules)}")
+    # chunks may be evicted, requeued — or stolen by an idle shell
+    daemon = Daemon(shells, reg, PolicyConfig(preemptive=True))
+    fab = reg.fabric("example")
+    print(f"fabric: {fab.name} -> "
+          f"{[(n, len(s.slots)) for n, s in shells.items()]}; "
+          f"modules: {sorted(reg.modules)}")
 
     rng = np.random.default_rng(0)
     re = rng.uniform(-2, 1, (256, 256)).astype(np.float32)
@@ -41,10 +70,13 @@ def main():
     img = rng.random((1024, 1024)).astype(np.float32)
     toks = rng.integers(0, 256, (8, 64)).astype(np.int32)
 
+    first_shell = next(iter(shells))
     t0 = time.perf_counter()
     handles = {
+        # alice pins her batch to one shell; the idle shell steals it
         "alice/mandelbrot": daemon.submit("alice", "mandelbrot",
-                                          [(re, im)] * 4),
+                                          [(re, im)] * 4,
+                                          affinity=first_shell),
         "bob/sobel": daemon.submit("bob", "sobel", [(img,)] * 4),
         "carol/lm-forward": daemon.submit("carol", "lm-forward",
                                           [(toks,)] * 2, priority=3,
@@ -57,9 +89,12 @@ def main():
         print(f"  {name}: {len(outs)} chunks done at t={dt:.2f}s "
               f"(out[0] shape {np.asarray(outs[0]).shape}){tag}")
     s = daemon.stats
+    f = daemon.fabric.stats
     print(f"stats: chunks={s['chunks']} reconfigurations="
           f"{s['reconfigurations']} reuses={s['reuses']} "
           f"preemptions={s['preemptions']} "
+          f"steals={f['steals']} stolen_chunks={f['stolen_chunks']} "
+          f"local_dispatch={f['local_dispatch']} "
           f"scheduler={s['sched_ns'] / max(s['sched_calls'], 1) / 1e3:.0f}"
           f"us/event")
     daemon.shutdown()

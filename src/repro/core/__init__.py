@@ -6,15 +6,18 @@
 - module.py     decoupled AOT compilation, relocation, weight loading
 - bus.py        layout adaptors (bus virtualisation analogue)
 - scheduler.py  resource-elastic space-time policy (replicate/replace/reuse)
+- fabric.py     one scheduling contract over many shells (locality + stealing)
 - simulator.py  discrete-event execution of the policy (tests + Fig 15)
-- daemon.py     live multi-tenant execution service
+- daemon.py     live multi-tenant execution service (a Fabric executor)
 - zoo.py        module builders (mandelbrot/sobel/matmul/LM)
 """
 from repro.core.allocator import BuddyAllocator, Range
 from repro.core.daemon import Daemon, JobHandle
-from repro.core.registry import ImplAlt, ModuleDescriptor, Registry
-from repro.core.scheduler import Assignment, PolicyConfig, Request, \
-    SchedulerState
+from repro.core.fabric import Fabric, FabricJob
+from repro.core.registry import FabricDescriptor, ImplAlt, \
+    ModuleDescriptor, Registry
+from repro.core.scheduler import Assignment, CostModel, PolicyConfig, \
+    Request, SchedulerState
 from repro.core.shell import Shell, ShellSpec, SlotSpec, uniform_shell
 from repro.core.simulator import SimJob, SimResult, simulate
 
@@ -38,4 +41,9 @@ def default_registry() -> Registry:
     reg.register_module(ModuleDescriptor(
         name="lm-forward", entrypoint="repro.core.zoo:build_lm_forward",
         impls=(ImplAlt("x1", 1, 20.0), ImplAlt("x2", 2, 11.0)), kind="fn"))
+    # example multi-shell fabrics (Fabric.from_registry(reg, name))
+    reg.register_fabric(FabricDescriptor("pod512", ("pod256_s4",
+                                                    "pod256_s8")))
+    reg.register_fabric(FabricDescriptor("hostpair", ("host8_s4",
+                                                      "host4_s4")))
     return reg

@@ -4,9 +4,15 @@ The paper uses gRPC + shared memory; in this single-host container the
 daemon is in-process with a serialisable request boundary (a real RPC
 front-end bolts onto `submit` unchanged) and zero-copy array handoff.
 
-Execution model: a scheduler thread applies the resource-elastic policy on
-every event; each assignment runs on its slot through a worker pool (XLA
-dispatch is per-device-set, so distinct slots execute concurrently).
+Execution model: the daemon is a thin executor over a `Fabric` — a named
+collection of shells, each with its own `SchedulerState`, behind one
+scheduling contract (core/fabric.py).  A scheduler thread drives
+`Fabric.schedule` on every event; each (shell, assignment) runs on its
+shell's slots through one shared worker pool (XLA dispatch is
+per-device-set, so distinct slots execute concurrently).  Construct with
+a single `Shell` for the seed single-shell behavior, or with a
+`{name: Shell}` mapping for multi-shell execution with locality-aware
+placement and cross-shell work stealing.
 
 Preemption (PolicyConfig.preemptive): when the policy evicts an in-flight
 chunk, the daemon cancels the victim assignment — if its worker has not
@@ -28,6 +34,7 @@ from typing import Any
 import jax
 
 from repro.core import bus
+from repro.core.fabric import Fabric
 from repro.core.module import AccelModule, Placement, run_placement
 from repro.core.registry import Registry
 from repro.core.scheduler import Assignment, PolicyConfig, SchedulerState
@@ -35,7 +42,11 @@ from repro.core.shell import Shell
 
 
 def _now_ms() -> float:
-    """Scheduler clock: milliseconds (matches the cost model's units)."""
+    """Scheduler clock: milliseconds (matches the cost model's units).
+
+    Every daemon timestamp — `JobHandle.t_submit` included — uses this
+    clock, so handle and scheduler times subtract directly.
+    """
     return time.perf_counter() * 1e3
 
 
@@ -43,19 +54,27 @@ def _now_ms() -> float:
 class JobHandle:
     rid: int
     future: Future          # resolves to list of chunk outputs
-    t_submit: float
+    t_submit: float         # _now_ms() — same clock as the scheduler
     priority: int = 0
     deadline_ms: float | None = None
 
 
 class Daemon:
-    def __init__(self, shell: Shell, registry: Registry,
+    def __init__(self, shell, registry: Registry,
                  policy: PolicyConfig | None = None, max_workers: int = 8):
-        self.shell = shell
+        """`shell`: a `Shell` (single-shell, seed behavior) or an ordered
+        `{name: Shell}` mapping (multi-shell fabric)."""
+        if isinstance(shell, dict):
+            self.shells: dict[str, Shell] = dict(shell)
+        else:
+            self.shells = {shell.spec.name: shell}
+        self.shell = next(iter(self.shells.values()))
         self.registry = registry
-        self.state = SchedulerState(len(shell.slots), registry, policy)
+        self.fabric = Fabric(
+            {name: len(s.slots) for name, s in self.shells.items()},
+            registry, policy)
         self._modules: dict[str, AccelModule] = {}
-        self._placements: dict[tuple[int, int], Placement] = {}
+        self._placements: dict[tuple[str, int, int], Placement] = {}
         self._events: queue.Queue = queue.Queue()
         self._lock = threading.Lock()
         self._results: dict[int, list] = {}
@@ -68,32 +87,46 @@ class Daemon:
                       "preemptions": 0, "sched_ns": 0, "sched_calls": 0}
         self._thread.start()
 
+    @property
+    def state(self) -> SchedulerState:
+        """The first shell's scheduler state (the whole story for the
+        degenerate single-shell daemon; one shard of a bigger fabric)."""
+        return next(iter(self.fabric.states.values()))
+
+    @property
+    def policy(self) -> PolicyConfig:
+        return self.fabric.policy
+
     # -- public API (paper Listings 4/5) --------------------------------------
 
     def run(self, tenant: str, jobs: list[dict]) -> list[JobHandle]:
         """jobs: [{"name": <module>, "chunks": [args...],
-                   "priority"?: int, "deadline_ms"?: float}] -> handles."""
+                   "priority"?: int, "deadline_ms"?: float,
+                   "affinity"?: <shell name>}] -> handles."""
         handles = []
         for j in jobs:
             handles.append(self.submit(tenant, j["name"], j["chunks"],
                                        priority=j.get("priority", 0),
-                                       deadline_ms=j.get("deadline_ms")))
+                                       deadline_ms=j.get("deadline_ms"),
+                                       affinity=j.get("affinity")))
         return handles
 
     def submit(self, tenant: str, module: str, chunks: list,
-               priority: int = 0,
-               deadline_ms: float | None = None) -> JobHandle:
-        self.registry.module(module)   # validates
+               priority: int = 0, deadline_ms: float | None = None,
+               affinity: str | None = None) -> JobHandle:
         fut: Future = Future()
         with self._lock:
-            req = self.state.submit(tenant, module, len(chunks),
-                                    payloads=list(chunks), now=_now_ms(),
-                                    priority=priority,
-                                    deadline_ms=deadline_ms)
-            self._results[req.rid] = [None] * len(chunks)
-            h = JobHandle(req.rid, fut, time.perf_counter(),
+            now = _now_ms()
+            # fabric.submit validates module/affinity (raising before
+            # any state is created) and copies the chunk list
+            job = self.fabric.submit(tenant, module, chunks,
+                                     now=now, priority=priority,
+                                     deadline_ms=deadline_ms,
+                                     affinity=affinity)
+            self._results[job.gid] = [None] * job.n_chunks
+            h = JobHandle(job.gid, fut, now,
                           priority=priority, deadline_ms=deadline_ms)
-            self._handles[req.rid] = h
+            self._handles[job.gid] = h
         self._events.put(("submit", None))
         return h
 
@@ -116,8 +149,8 @@ class Daemon:
                 mod = self._modules.setdefault(name, mod)
         return mod
 
-    def _placement(self, a: Assignment) -> Placement:
-        key = (a.rng.start, a.rng.size)
+    def _placement(self, shell_name: str, a: Assignment) -> Placement:
+        key = (shell_name, a.rng.start, a.rng.size)
         with self._lock:
             pl = self._placements.get(key)
             if pl is not None and pl.module.name == a.module \
@@ -125,13 +158,14 @@ class Daemon:
                 self.stats["reuses"] += 1
                 return pl
         mod = self._module(a.module)
-        slot = (self.shell.slots[a.rng.start] if a.rng.size == 1 else
-                self.shell.merged_slot(list(a.rng.slots)))
+        shell = self.shells[shell_name]
+        slot = (shell.slots[a.rng.start] if a.rng.size == 1 else
+                shell.merged_slot(list(a.rng.slots)))
         pl = mod.place(slot, a.footprint)
         with self._lock:
             # a preempted victim mid-dispatch must not clobber the
             # placement its preemptor just installed on the same range
-            if a.aid in self.state.active:
+            if a.aid in self.fabric.states[shell_name].active:
                 self._placements[key] = pl
                 self.stats["reconfigurations"] += 1
         return pl
@@ -152,76 +186,112 @@ class Daemon:
                 pass
             with self._lock:
                 t0 = time.perf_counter_ns()
-                assignments = self.state.schedule(now=_now_ms())
+                assignments = self.fabric.schedule(now=_now_ms())
                 self._handle_preempted_locked()
                 self.stats["sched_ns"] += time.perf_counter_ns() - t0
                 self.stats["sched_calls"] += 1
-            for a in assignments:
-                self._pool.submit(self._run_assignment, a)
+            for shell_name, a in assignments:
+                self._pool.submit(self._run_assignment, shell_name, a)
+
+    def _gid_of_locked(self, shell_name: str, rid: int) -> int:
+        """Job id for a sub-request; requests created directly on a shell
+        state (the legacy single-shell path) map to their own rid."""
+        entry = self.fabric.sub(shell_name, rid)
+        return entry[0].gid if entry is not None else rid
 
     def _handle_preempted_locked(self) -> None:
-        for v in self.state.drain_preempted():
+        for shell_name, v in self.fabric.drain_preempted():
             self._cancelled.add(v.aid)
             self.stats["preemptions"] += 1
             # a failed request whose last in-flight chunk was evicted
             # drains here rather than through complete()
-            self._finalize_locked(v.rid)
+            self._finalize_locked(self._gid_of_locked(shell_name, v.rid))
 
-    def _finalize_locked(self, rid: int) -> None:
-        """Release per-request state once a request has fully drained."""
-        req = self.state.requests.get(rid)
-        if req is None or not req.finished:
+    def _finalize_locked(self, gid: int) -> None:
+        """Release per-job state once a job has fully drained."""
+        job = self.fabric.jobs.get(gid)
+        if job is not None:
+            if not self.fabric.finished(gid):
+                return
+            self._handles.pop(gid, None)
+            self._results.pop(gid, None)
+            # keep the job/request records (stats/queries) but release
+            # the input arrays — a long-running daemon must not
+            # accumulate every tenant's payloads
+            job.payloads = None
+            for shell_name, rid in job.subs:
+                self.fabric.states[shell_name].requests[rid].payloads = None
             return
-        self._handles.pop(rid, None)
-        self._results.pop(rid, None)
-        # keep the Request record (stats/queries) but release the input
-        # arrays — a long-running daemon must not accumulate every
-        # tenant's payloads
-        req.payloads = None
+        # legacy path: the request was created directly on a shell state
+        for st in self.fabric.states.values():
+            req = st.requests.get(gid)
+            if req is not None:
+                if req.finished:
+                    self._handles.pop(gid, None)
+                    self._results.pop(gid, None)
+                    req.payloads = None
+                return
 
-    def _run_assignment(self, a: Assignment):
+    def _run_assignment(self, shell_name: str, a: Assignment):
         with self._lock:
             if a.aid in self._cancelled:   # preempted before we started
                 self._cancelled.discard(a.aid)
-                self._finalize_locked(a.rid)
+                self._finalize_locked(self._gid_of_locked(shell_name, a.rid))
                 self._events.put(("cancelled", None))
                 return
+        st = self.fabric.states[shell_name]
         try:
-            pl = self._placement(a)
-            req = self.state.requests[a.rid]
+            pl = self._placement(shell_name, a)
+            req = st.requests[a.rid]
             payload = req.payloads[a.chunk]
             prog = pl.module.program(pl.slot, pl.footprint)
             args, _ = bus.adapt_inputs(
                 payload if isinstance(payload, tuple) else (payload,),
                 prog.abstract_inputs)
+            t_run = _now_ms()
             out = run_placement(pl, *args)
+            t_run = _now_ms() - t_run
             err = None
         except Exception as e:  # noqa: BLE001 - propagate to the future
-            out, err = None, e
+            out, err, t_run = None, e, 0.0
         with self._lock:
             self._cancelled.discard(a.aid)
-            if not self.state.complete(a, now=_now_ms()):
+            entry = self.fabric.sub(shell_name, a.rid)
+            if not self.fabric.complete(shell_name, a, now=_now_ms()):
                 # preempted mid-dispatch: discard the partial result; the
                 # chunk was requeued and re-runs under a fresh assignment
-                self._finalize_locked(a.rid)
+                self._finalize_locked(self._gid_of_locked(shell_name, a.rid))
                 self._events.put(("discarded", None))
                 return
             self.stats["chunks"] += 1
-            req = self.state.requests[a.rid]
-            h = self._handles.get(a.rid)
+            if err is None and not a.reconfigure \
+                    and self.policy.refine_cost_model:
+                self.fabric.cost.observe(a.module, a.footprint, t_run)
+            if entry is not None:
+                job, cmap = entry
+                gid, gchunk = job.gid, cmap[a.chunk]
+                complete = job.complete
+            else:                           # legacy direct-state request
+                job = None
+                gid, gchunk = a.rid, a.chunk
+                complete = st.requests[a.rid].complete
+            h = self._handles.get(gid)
             if err is not None:
-                # abort the rest of the request and surface the error once;
-                # drop per-request buffers so a failing chunk leaves no
-                # orphaned state behind
-                self.state.abort(a.rid)
-                self._results.pop(a.rid, None)
+                # abort the rest of the job on every shell and surface the
+                # error once; drop per-job buffers so a failing chunk
+                # leaves no orphaned state behind
+                if job is not None:
+                    self.fabric.abort(gid)
+                else:
+                    st.abort(a.rid)
+                self._results.pop(gid, None)
                 if h is not None and not h.future.done():
                     h.future.set_exception(err)
             else:
-                buf = self._results.get(a.rid)
+                buf = self._results.get(gid)
                 if buf is not None:
-                    buf[a.chunk] = out
-                if req.complete and h is not None and not h.future.done():
-                    h.future.set_result(self._results.pop(a.rid))
-            self._finalize_locked(a.rid)
+                    buf[gchunk] = out
+                if complete and h is not None and not h.future.done():
+                    h.future.set_result(self._results.pop(gid))
+            self._finalize_locked(gid)
         self._events.put(("done", None))

@@ -1,0 +1,346 @@
+"""Fabric: one scheduling contract over many shells.
+
+A `Fabric` is a named collection of shells, each backed by its own
+`SchedulerState`, behind a single submit/schedule/complete contract that
+both executors (the discrete-event simulator and the live daemon) drive.
+It is the scale-out layer FOS motivates with its standardised abstraction
+argument: the space-time policy stays a pure per-shell core, and the
+fabric adds the cross-shell arbitration —
+
+  - a **global admission queue**: `submit` records a `FabricJob`;
+    dispatch to a concrete shell is deferred to the next `schedule`
+    call so placement sees current residency and load;
+  - **locality-aware dispatch** (`PolicyConfig.locality`): a job goes to
+    the shell already hosting its module resident (dodging the modeled
+    reconfiguration penalty), falling back to least-loaded, with an
+    optional hard `affinity=` override per job;
+  - **cross-shell work stealing** (`PolicyConfig.steal`): a shell with
+    free slots and no local backlog pulls unissued chunks queued behind
+    the most-backlogged shell; the thief pays the reconfiguration
+    penalty through the ordinary cost model, chunks are taken from the
+    tail (preemption victims requeued at the front go last), and every
+    chunk still runs exactly once;
+  - a shared `CostModel` so online `est_chunk_ms` refinement on any
+    shell improves placement everywhere.
+
+Identity model: all shells share one rid counter and one aid counter, so
+request/assignment ids are unique fabric-wide, and a job's global id
+(`FabricJob.gid`) equals the rid of its *primary* sub-request.  The
+degenerate one-shell fabric therefore reproduces `SchedulerState`
+behavior exactly — same rids, same event order, same floats — which is
+how `Daemon(shell, ...)` and `simulate(registry, n_slots, ...)` keep
+their seed semantics unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Any, Iterable, Mapping
+
+from repro.core.scheduler import Assignment, CostModel, PolicyConfig, \
+    SchedulerState
+
+
+@dataclasses.dataclass
+class FabricJob:
+    """One submitted job, tracked fabric-wide across its sub-requests."""
+    gid: int
+    tenant: str
+    module: str
+    n_chunks: int
+    payloads: list | None = None
+    priority: int = 0
+    deadline_ms: float | None = None
+    affinity: str | None = None          # pin dispatch to this shell
+    t_submit: float = 0.0
+    t_finish: float | None = None
+    done: int = 0
+    failed: bool = False
+    # (shell_name, rid) of every sub-request carrying this job's chunks
+    subs: list = dataclasses.field(default_factory=list)
+
+    @property
+    def complete(self) -> bool:
+        return self.done >= self.n_chunks
+
+    @property
+    def deadline_at(self) -> float:
+        if self.deadline_ms is None:
+            return float("inf")
+        return self.t_submit + self.deadline_ms
+
+
+class Fabric:
+    """Named shells behind a single scheduling contract.
+
+    `shells` maps shell name -> slot count (or anything with an
+    `n_slots` attribute, e.g. a ShellSpec).  All shells share one
+    `PolicyConfig` and one `CostModel`.
+    """
+
+    def __init__(self, shells: Mapping[str, Any], registry,
+                 policy: PolicyConfig | None = None,
+                 cost: CostModel | None = None):
+        if not shells:
+            raise ValueError("a fabric needs at least one shell")
+        self.registry = registry
+        self.policy = policy or PolicyConfig()
+        self.cost = cost or CostModel(registry, self.policy.refine_alpha)
+        self._rid = itertools.count()        # fabric-wide id spaces
+        self._aid = itertools.count()
+        self.states: dict[str, SchedulerState] = {}
+        for name, n in shells.items():
+            n_slots = n if isinstance(n, int) else n.n_slots
+            st = SchedulerState(n_slots, registry, self.policy,
+                                cost=self.cost)
+            st._rid = self._rid
+            st._aid = self._aid
+            self.states[name] = st
+        self.jobs: dict[int, FabricJob] = {}
+        # (shell_name, rid) -> (job, {local chunk id -> global chunk id})
+        self._subs: dict[tuple[str, int], tuple[FabricJob, dict]] = {}
+        self._admission: deque[FabricJob] = deque()
+        self._now = 0.0
+        self.stats = {"dispatched": 0, "local_dispatch": 0,
+                      "steals": 0, "stolen_chunks": 0}
+
+    @classmethod
+    def from_registry(cls, registry, name: str,
+                      policy: PolicyConfig | None = None) -> "Fabric":
+        """Build from a registered `FabricDescriptor` (fabrics.json)."""
+        desc = registry.fabric(name)
+        return cls({s: registry.shell(s).n_slots for s in desc.shells},
+                   registry, policy)
+
+    # -- queries --------------------------------------------------------------
+
+    @property
+    def names(self) -> list[str]:
+        return list(self.states)
+
+    @property
+    def n_slots(self) -> int:
+        return sum(st.alloc.n for st in self.states.values())
+
+    def resolve(self, shell: str, a: Assignment) -> tuple[FabricJob, int]:
+        """(job, global chunk id) for an assignment of a sub-request."""
+        job, cmap = self._subs[(shell, a.rid)]
+        return job, cmap[a.chunk]
+
+    def sub(self, shell: str, rid: int):
+        """(job, chunk map) for a sub-request, or None if the request was
+        created directly on a shell state (legacy single-shell path)."""
+        return self._subs.get((shell, rid))
+
+    def finished(self, gid: int) -> bool:
+        """Complete, or failed with no chunk still in flight anywhere."""
+        job = self.jobs[gid]
+        if job.complete:
+            return True
+        if not job.failed:
+            return False
+        if job in self._admission:
+            return False
+        return all(self.states[s].requests[rid].finished
+                   for s, rid in job.subs)
+
+    def _pending(self, st: SchedulerState) -> int:
+        return st.pending_chunks()
+
+    @staticmethod
+    def _hosts(st: SchedulerState, module: str) -> bool:
+        """Does any of the shell's ranges host `module` resident?"""
+        return any(m == module for m, _ in st.resident.values())
+
+    def _load(self, st: SchedulerState) -> float:
+        """Backlog + occupancy, normalised by shell size."""
+        return (self._pending(st) + len(st.alloc.busy)) / st.alloc.n
+
+    # -- submission -----------------------------------------------------------
+
+    def submit(self, tenant: str, module: str, chunks,
+               now: float = 0.0, priority: int = 0,
+               deadline_ms: float | None = None,
+               affinity: str | None = None) -> FabricJob:
+        """Admit a job.  `chunks` is a payload list (live mode) or a bare
+        chunk count (simulation).  Dispatch to a shell happens at the
+        next `schedule` call."""
+        self.registry.module(module)         # validates, nice KeyError
+        if affinity is not None and affinity not in self.states:
+            raise KeyError(f"unknown shell {affinity!r} for affinity; "
+                           f"fabric shells: {sorted(self.states)}")
+        if isinstance(chunks, int):
+            n_chunks, payloads = chunks, None
+        else:
+            payloads = list(chunks)
+            n_chunks = len(payloads)
+        gid = next(self._rid)
+        job = FabricJob(gid, tenant, module, n_chunks, payloads,
+                        priority=priority, deadline_ms=deadline_ms,
+                        affinity=affinity, t_submit=now)
+        self.jobs[gid] = job
+        self._now = max(self._now, now)
+        self._admission.append(job)
+        return job
+
+    def abort(self, gid: int) -> None:
+        """Drop a job's unissued chunks on every shell (chunk error)."""
+        job = self.jobs.get(gid)
+        if job is None or job.failed:
+            return
+        job.failed = True
+        try:
+            self._admission.remove(job)       # not yet dispatched
+        except ValueError:
+            pass
+        for shell, rid in job.subs:
+            self.states[shell].abort(rid)
+
+    # -- dispatch -------------------------------------------------------------
+
+    def _pick_shell(self, job: FabricJob) -> str:
+        if job.affinity is not None:
+            return job.affinity
+        names = self.names
+        if self.policy.locality:
+            resident = [n for n in names
+                        if self._hosts(self.states[n], job.module)]
+            if resident:
+                names = resident
+        order = {n: i for i, n in enumerate(self.names)}
+        return min(names, key=lambda n: (self._load(self.states[n]),
+                                         order[n]))
+
+    def _dispatch(self, job: FabricJob) -> str:
+        shell = self._pick_shell(job)
+        st = self.states[shell]
+        if self.policy.locality and self._hosts(st, job.module):
+            self.stats["local_dispatch"] += 1
+        st.submit(job.tenant, job.module, job.n_chunks,
+                  payloads=job.payloads, now=job.t_submit,
+                  priority=job.priority, deadline_ms=job.deadline_ms,
+                  rid=job.gid)
+        job.subs.append((shell, job.gid))
+        self._subs[(shell, job.gid)] = (
+            job, {i: i for i in range(job.n_chunks)})
+        self.stats["dispatched"] += 1
+        return shell
+
+    # -- work stealing --------------------------------------------------------
+
+    def _steal_from(self, victim: str, thief: str, now: float) -> int:
+        """Move tail chunks of the victim shell's most-backlogged request
+        onto the thief.  Returns the number of chunks moved."""
+        vst, tst = self.states[victim], self.states[thief]
+        best, best_key = None, None
+        for q in vst.queues.values():
+            for r in q:
+                if r.pending <= 0:
+                    continue
+                entry = self._subs.get((victim, r.rid))
+                if entry is None:
+                    continue              # not fabric-managed: leave it
+                min_fp = min(self.registry.module(r.module).footprints)
+                if min_fp > tst.alloc.largest_free():
+                    continue              # thief can't host this module
+                key = (-r.pending, r.rid)
+                if best_key is None or key < best_key:
+                    best, best_key = (r, entry, min_fp), key
+        if best is None:
+            return 0
+        req, (job, cmap), min_fp = best
+        # steal what the thief can place right now: the count of free
+        # aligned windows at the module's smallest footprint (raw free
+        # slots over-count under fragmentation); stealing re-evaluates
+        # on every event, so a deep backlog drains incrementally
+        k = min(req.pending, max(1, tst._n_free_ranges(min_fp)))
+        # the stolen sub-request inherits the victim's aging anchor
+        # (time since submit or last service), so starvation-aging
+        # credit earned queueing behind the busy shell survives the move
+        anchor = req.t_submit if req.t_last_served is None else \
+            max(req.t_submit, req.t_last_served)
+        taken = vst.steal_pending(req.rid, k)
+        if not taken:
+            return 0
+        global_ids = [cmap[c] for c in taken]
+        payloads = None if job.payloads is None else \
+            [job.payloads[g] for g in global_ids]
+        deadline = None if job.deadline_ms is None else \
+            job.deadline_at - anchor
+        sub = tst.submit(job.tenant, job.module, len(taken),
+                         payloads=payloads, now=anchor,
+                         priority=job.priority, deadline_ms=deadline)
+        job.subs.append((thief, sub.rid))
+        self._subs[(thief, sub.rid)] = (
+            job, {i: g for i, g in enumerate(global_ids)})
+        self.stats["steals"] += 1
+        self.stats["stolen_chunks"] += len(taken)
+        return len(taken)
+
+    def _steal(self, now: float,
+               placed: dict[str, set]) -> list[tuple[str, Assignment]]:
+        out = []
+        while True:
+            moved = False
+            for thief, tst in self.states.items():
+                if tst.alloc.largest_free() == 0 or self._pending(tst):
+                    continue              # busy, or has its own backlog
+                victims = sorted(
+                    (n for n in self.states
+                     if n != thief and self._pending(self.states[n]) > 0),
+                    key=lambda n: (-self._pending(self.states[n]), n))
+                for victim in victims:
+                    if self._steal_from(victim, thief, now):
+                        out.extend((thief, a) for a in
+                                   tst.schedule(now, placed=placed[thief]))
+                        moved = True
+                        break
+            if not moved:
+                return out
+
+    # -- scheduling -----------------------------------------------------------
+
+    def schedule(self, now: float | None = None) \
+            -> list[tuple[str, Assignment]]:
+        """Dispatch admitted jobs, fill every shell's free slots, then
+        let idle shells steal.  Returns (shell_name, Assignment) pairs;
+        preemption victims are reported through `drain_preempted()`."""
+        now = self._now if now is None else max(self._now, now)
+        self._now = now
+        while self._admission:
+            job = self._admission.popleft()
+            if not job.failed:
+                self._dispatch(job)
+        # one placed-set per shell for the whole pass: an assignment
+        # issued here must not be preempted by a later steal-path
+        # schedule call at the same instant (same-pass churn guard)
+        placed: dict[str, set] = {name: set() for name in self.states}
+        out = [(name, a) for name, st in self.states.items()
+               for a in st.schedule(now, placed=placed[name])]
+        if self.policy.steal and self.policy.elastic \
+                and len(self.states) > 1:
+            out.extend(self._steal(now, placed))
+        return out
+
+    def complete(self, shell: str, a: Assignment,
+                 now: float = 0.0) -> bool:
+        """Record a finished chunk.  False when the assignment was
+        preempted first (stale — the executor discards the result)."""
+        st = self.states[shell]
+        if not st.complete(a, now=now):
+            return False
+        self._now = max(self._now, now)
+        entry = self._subs.get((shell, a.rid))
+        if entry is not None:
+            job, _ = entry
+            job.done += 1
+            if job.complete and job.t_finish is None:
+                job.t_finish = now
+        return True
+
+    def drain_preempted(self) -> list[tuple[str, Assignment]]:
+        """Victim assignments since the last drain, tagged by shell; the
+        executor must cancel them (chunks are already requeued)."""
+        return [(name, a) for name, st in self.states.items()
+                for a in st.drain_preempted()]

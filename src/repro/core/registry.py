@@ -79,12 +79,34 @@ class ModuleDescriptor:
         return getattr(importlib.import_module(mod), fn)
 
 
+@dataclasses.dataclass(frozen=True)
+class FabricDescriptor:
+    """A registered fabric: an ordered list of shell names scheduled as
+    one unit (core/fabric.py).  Like shells and modules, a fabric is a
+    serialisable descriptor (fabrics.json), so the scale-out topology is
+    swappable without touching any other component.
+    """
+    name: str
+    shells: tuple[str, ...]
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self):
+        return {"name": self.name, "shells": list(self.shells),
+                "meta": self.meta}
+
+    @staticmethod
+    def from_json(d):
+        return FabricDescriptor(d["name"], tuple(d["shells"]),
+                                d.get("meta", {}))
+
+
 class Registry:
     """Central JSON-backed registry (paper: 'JSON based registry')."""
 
     def __init__(self):
         self.shells: dict[str, ShellSpec] = {}
         self.modules: dict[str, ModuleDescriptor] = {}
+        self.fabrics: dict[str, FabricDescriptor] = {}
 
     # -- registration --------------------------------------------------------
 
@@ -94,6 +116,11 @@ class Registry:
     def register_module(self, desc: ModuleDescriptor) -> None:
         self.modules[desc.name] = desc
 
+    def register_fabric(self, desc: FabricDescriptor) -> None:
+        for s in desc.shells:
+            self.shell(s)              # fail fast on unknown shell names
+        self.fabrics[desc.name] = desc
+
     def module(self, name: str) -> ModuleDescriptor:
         if name not in self.modules:
             raise KeyError(f"unknown module {name!r}; "
@@ -101,7 +128,16 @@ class Registry:
         return self.modules[name]
 
     def shell(self, name: str) -> ShellSpec:
+        if name not in self.shells:
+            raise KeyError(f"unknown shell {name!r}; "
+                           f"registered: {sorted(self.shells)}")
         return self.shells[name]
+
+    def fabric(self, name: str) -> FabricDescriptor:
+        if name not in self.fabrics:
+            raise KeyError(f"unknown fabric {name!r}; "
+                           f"registered: {sorted(self.fabrics)}")
+        return self.fabrics[name]
 
     # -- persistence ----------------------------------------------------------
 
@@ -112,6 +148,8 @@ class Registry:
             {k: v.to_json() for k, v in self.shells.items()}, indent=2))
         (path / "modules.json").write_text(json.dumps(
             {k: v.to_json() for k, v in self.modules.items()}, indent=2))
+        (path / "fabrics.json").write_text(json.dumps(
+            {k: v.to_json() for k, v in self.fabrics.items()}, indent=2))
 
     @staticmethod
     def load(path: str | Path) -> "Registry":
@@ -123,4 +161,8 @@ class Registry:
             reg.register_shell(ShellSpec.from_json(v))
         for v in modules.values():
             reg.register_module(ModuleDescriptor.from_json(v))
+        fabrics_path = path / "fabrics.json"   # absent in pre-fabric saves
+        if fabrics_path.exists():
+            for v in json.loads(fabrics_path.read_text()).values():
+                reg.register_fabric(FabricDescriptor.from_json(v))
         return reg

@@ -119,13 +119,55 @@ class PolicyConfig:
     # evict only when the preemptor outranks the victim by at least this
     # many effective-priority levels (prevents same-class thrash)
     preempt_margin: int = 1
+    # -- fabric-level policy (core/fabric.py) ----------------------------
+    # dispatch to the shell already hosting the module resident (dodges
+    # the reconfiguration penalty), falling back to least-loaded
+    locality: bool = True
+    # an idle shell pulls pending chunks queued behind a busy shell's
+    # backlog (only meaningful for multi-shell fabrics, elastic mode)
+    steal: bool = True
+    # EWMA-refine est_chunk_ms per (module, footprint) from observed
+    # chunk service times (daemon: wall clock; simulator: true times)
+    refine_cost_model: bool = False
+    refine_alpha: float = 0.3             # weight of the newest observation
+
+
+class CostModel:
+    """Per-(module, footprint) chunk-time estimates, refined online.
+
+    Starts from the registry's static `est_chunk_ms` and, when
+    `PolicyConfig.refine_cost_model` is on, EWMA-updates from observed
+    chunk service times (`observe`).  One instance is shared by every
+    SchedulerState in a Fabric so an observation on any shell improves
+    placement everywhere.
+    """
+
+    def __init__(self, registry, alpha: float = 0.3):
+        self.registry = registry
+        self.alpha = alpha
+        self._est: dict[tuple[str, int], float] = {}
+
+    def est_chunk_ms(self, module: str, footprint: int) -> float:
+        v = self._est.get((module, footprint))
+        if v is not None:
+            return v
+        return self.registry.module(module).impl_for(footprint).est_chunk_ms
+
+    def observe(self, module: str, footprint: int, ms: float) -> None:
+        key = (module, footprint)
+        prev = self._est.get(key)
+        self._est[key] = ms if prev is None else \
+            self.alpha * ms + (1.0 - self.alpha) * prev
 
 
 class SchedulerState:
-    def __init__(self, n_slots: int, registry, policy: PolicyConfig | None = None):
+    def __init__(self, n_slots: int, registry,
+                 policy: PolicyConfig | None = None,
+                 cost: CostModel | None = None):
         self.alloc = BuddyAllocator(n_slots)
         self.registry = registry
         self.policy = policy or PolicyConfig()
+        self.cost = cost or CostModel(registry, self.policy.refine_alpha)
         self.queues: dict[str, deque[Request]] = {}
         # least-recently-served round robin: new tenants get priority
         self._served_at: dict[str, int] = {}
@@ -144,8 +186,11 @@ class SchedulerState:
 
     def submit(self, tenant: str, module: str, n_chunks: int,
                payloads=None, now: float = 0.0, priority: int = 0,
-               deadline_ms: float | None = None) -> Request:
-        rid = next(self._rid)
+               deadline_ms: float | None = None,
+               rid: int | None = None) -> Request:
+        # a Fabric pre-draws the id from the shared counter so a job's
+        # global id equals its primary sub-request's rid on every shell
+        rid = next(self._rid) if rid is None else rid
         req = Request(rid, tenant, module, n_chunks, payloads,
                       priority=priority, deadline_ms=deadline_ms,
                       t_submit=now)
@@ -169,6 +214,29 @@ class SchedulerState:
             return
         req.failed = True
         self._pop_finished(req)
+
+    def steal_pending(self, rid: int, k: int) -> list[int]:
+        """Remove up to `k` unissued chunks from the *tail* of a request's
+        pending queue (the chunks furthest from execution — preemption
+        victims requeued at the front are taken last) and shrink the
+        request accordingly.  Returns the removed chunk ids — the caller
+        (a Fabric) re-submits them elsewhere, so each chunk still runs
+        exactly once.  A request drained to completion by the steal is
+        popped from its tenant queue.
+        """
+        req = self.requests[rid]
+        if req.failed:
+            return []
+        take = []
+        for _ in range(min(k, len(req._chunks))):
+            take.append(req._chunks.pop())
+        req.n_chunks -= len(take)
+        self._pop_finished(req)
+        return take
+
+    def pending_chunks(self) -> int:
+        """Unissued chunks across every queued request (backlog metric)."""
+        return sum(r.pending for q in self.queues.values() for r in q)
 
     def _pop_finished(self, req: Request) -> None:
         """Unblock the tenant queue once a request has fully drained.
@@ -292,12 +360,12 @@ class SchedulerState:
 
         best = None  # (rate, reuse, fp, range, reconfigure)
         for fp in fps:
-            impl = desc.impl_for(fp)
+            est = self.cost.est_chunk_ms(req.module, fp)
             reuse = free_reuse_range(fp)
             n_avail = self._n_free_ranges(fp)
             conc = max(1, min(req.pending, n_avail))
             if reuse is not None:
-                t = impl.est_chunk_ms
+                t = est
                 cand = (conc / max(t, 1e-9), 1, fp, reuse, False)
             else:
                 r = self.alloc.find(fp)
@@ -305,7 +373,7 @@ class SchedulerState:
                     continue
                 prev = self.resident.get((r.start, r.size))
                 reconf = prev != (req.module, fp)
-                t = impl.est_chunk_ms + (
+                t = est + (
                     self.policy.reconfig_penalty_ms if reconf else 0.0)
                 cand = (conc / max(t, 1e-9), 0, fp, r, reconf)
             if best is None or (cand[0], cand[1], cand[2]) > \
@@ -391,13 +459,20 @@ class SchedulerState:
 
     # -- scheduling -------------------------------------------------------------
 
-    def schedule(self, now: float | None = None) -> list[Assignment]:
+    def schedule(self, now: float | None = None,
+                 placed: set[int] | None = None) -> list[Assignment]:
         """Fill free slots with chunks; called on every event.  Preemption
-        victims (if any) are reported through `drain_preempted()`."""
+        victims (if any) are reported through `drain_preempted()`.
+
+        `placed` collects the aids issued this pass (they are exempt from
+        preemption — zero-time churn guard); a Fabric passes one set per
+        shell across its main and steal-path schedule calls so the guard
+        spans the whole fabric scheduling pass, not just this call.
+        """
         now = self._now if now is None else max(self._now, now)
         self._now = now
         out = []
-        placed: set[int] = set()
+        placed = set() if placed is None else placed
         while True:
             req, contending = self._pick(now)
             if req is None:

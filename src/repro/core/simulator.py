@@ -1,15 +1,32 @@
 """Discrete-event simulator for the resource-elastic scheduler.
 
-Drives the exact SchedulerState policy with a virtual clock and the
-registry's cost model; used by property tests and by the Fig.-15 benchmark
-(elastic vs fixed-module scheduling: utilization / makespan / latency) as
-well as the THEMIS-style preemption benchmark (benchmarks/preemption.py).
+Drives the scheduling policy through the `Fabric` contract with a virtual
+clock and the registry's cost model; used by property tests and by the
+Fig.-15 benchmark (elastic vs fixed-module scheduling) as well as the
+THEMIS-style preemption benchmark (benchmarks/preemption.py) and the
+multi-shell stealing benchmark (benchmarks/multi_shell.py).
+
+`simulate` accepts either a bare slot count (the seed single-shell form —
+internally a degenerate one-shell fabric, with identical ids, event order
+and metrics), a `{shell_name: n_slots}` mapping, or a pre-built `Fabric`
+(pass the fabric when the caller wants to inspect its shared cost model or
+steal counters afterwards; a fabric is single-use — one per run).  Multi-shell runs lay shells out side by side
+on a global slot axis (each shell gets a contiguous offset range), so the
+seed timeline format `(t_start, t_end, (slot, size), rid)` is unchanged
+and per-shell views are recovered from `SimResult.per_shell`.
 
 Preemption semantics: when the policy evicts an in-flight chunk, the
 victim's occupancy is truncated at the eviction instant (the partial work
 is discarded — it still counts as slot occupancy, not as goodput), the
 chunk is requeued, and its original completion event becomes a stale no-op.
-Every submitted chunk therefore still completes exactly once.
+Every submitted chunk therefore still completes exactly once, even when
+idle shells steal pending chunks across the fabric.
+
+Cost model: the *actual* simulated chunk time comes from the registry
+(`ImplAlt.meta["true_chunk_ms"]` when present, else `est_chunk_ms`), so a
+mis-estimated module can be modeled; with `PolicyConfig.refine_cost_model`
+the fabric's shared `CostModel` EWMA-converges its estimates (used by
+placement decisions) onto the observed true times.
 """
 from __future__ import annotations
 
@@ -18,8 +35,9 @@ import heapq
 import math
 from typing import Iterable
 
+from repro.core.fabric import Fabric
 from repro.core.registry import Registry
-from repro.core.scheduler import Assignment, PolicyConfig, SchedulerState
+from repro.core.scheduler import Assignment, PolicyConfig
 
 
 def p95(latencies: list[float]) -> float:
@@ -38,6 +56,7 @@ class SimJob:
     n_chunks: int
     priority: int = 0
     deadline_ms: float | None = None
+    affinity: str | None = None         # pin dispatch to a fabric shell
 
 
 @dataclasses.dataclass
@@ -54,6 +73,9 @@ class SimResult:
     # rid -> {"tenant", "priority", "deadline_ms", "n_chunks"}
     request_meta: dict[int, dict] = dataclasses.field(default_factory=dict)
     n_slots: int = 1
+    # shell name -> {"offset", "n_slots", "busy_ms", "utilization"}
+    per_shell: dict[str, dict] = dataclasses.field(default_factory=dict)
+    stolen_chunks: int = 0              # chunks moved by work stealing
 
     @property
     def mean_latency(self) -> float:
@@ -94,18 +116,53 @@ class SimResult:
 
 def chunk_time_ms(registry: Registry, a: Assignment,
                   policy: PolicyConfig) -> float:
+    """True simulated service time of an assignment (the cost-model
+    estimate may diverge; see `ImplAlt.meta["true_chunk_ms"]`)."""
     desc = registry.module(a.module)
     impl = desc.impl_for(a.footprint)
-    t = impl.est_chunk_ms
+    t = impl.meta.get("true_chunk_ms", impl.est_chunk_ms)
     if a.reconfigure:
         t += policy.reconfig_penalty_ms
     return t
 
 
-def simulate(registry: Registry, n_slots: int, jobs: Iterable[SimJob],
+def _as_fabric(registry: Registry, spec, policy: PolicyConfig) -> Fabric:
+    if isinstance(spec, Fabric):
+        return spec
+    if isinstance(spec, int):
+        return Fabric({"shell0": spec}, registry, policy)
+    return Fabric(dict(spec), registry, policy)
+
+
+def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
              policy: PolicyConfig | None = None) -> SimResult:
+    """Replay `jobs` through the fabric's scheduling contract.
+
+    `fabric_or_n_slots`: an int (one anonymous shell — the seed form), a
+    `{name: n_slots}` mapping, or a `Fabric`.  When a Fabric is passed,
+    its own `PolicyConfig` governs; passing a *different* policy too is
+    rejected rather than silently ignored.
+    """
+    if isinstance(fabric_or_n_slots, Fabric):
+        if policy is not None and policy is not fabric_or_n_slots.policy:
+            raise ValueError(
+                "simulate() got both a Fabric and a different "
+                "PolicyConfig; the fabric's own policy governs — drop "
+                "the policy argument or build the fabric with it")
+        if fabric_or_n_slots.jobs:
+            raise ValueError(
+                "simulate() needs a fresh Fabric: this one already "
+                "carries jobs from a previous run, which would pollute "
+                "latency/steal metrics — build a new Fabric per run")
     policy = policy or PolicyConfig()
-    state = SchedulerState(n_slots, registry, policy)
+    fabric = _as_fabric(registry, fabric_or_n_slots, policy)
+    policy = fabric.policy
+    offsets, off = {}, 0
+    for name, st in fabric.states.items():
+        offsets[name] = off
+        off += st.alloc.n
+    total_slots = off
+
     events: list[tuple[float, int, str, object]] = []
     seq = 0
     for j in jobs:
@@ -120,52 +177,71 @@ def simulate(registry: Registry, n_slots: int, jobs: Iterable[SimJob],
     preempted_spans = []
     starts: dict[int, float] = {}       # aid -> dispatch time
     meta: dict[int, dict] = {}
+    busy_by_shell: dict[str, float] = {n: 0.0 for n in fabric.states}
 
     def dispatch(t0: float):
         nonlocal seq, busy_time, wasted_time, reconfs
-        new = state.schedule(now=t0)
-        for v in state.drain_preempted():
+        new = fabric.schedule(now=t0)
+        for shell, v in fabric.drain_preempted():
             ts = starts.pop(v.aid)
             busy_time += (t0 - ts) * v.rng.size
+            busy_by_shell[shell] += (t0 - ts) * v.rng.size
             wasted_time += (t0 - ts) * v.rng.size
-            preempted_spans.append((ts, t0, (v.rng.start, v.rng.size),
-                                    v.rid))
-        for a in new:
+            job, _ = fabric.resolve(shell, v)
+            preempted_spans.append(
+                (ts, t0, (offsets[shell] + v.rng.start, v.rng.size),
+                 job.gid))
+        for shell, a in new:
             dt = chunk_time_ms(registry, a, policy)
             if a.reconfigure:
                 reconfs += 1
             starts[a.aid] = t0
-            heapq.heappush(events, (t0 + dt, seq, "done", a))
+            heapq.heappush(events, (t0 + dt, seq, "done", (shell, a)))
             seq += 1
 
     while events:
         now, _, kind, obj = heapq.heappop(events)
         if kind == "arrive":
-            req = state.submit(obj.tenant, obj.module, obj.n_chunks,
-                               now=now, priority=obj.priority,
-                               deadline_ms=obj.deadline_ms)
-            meta[req.rid] = {"tenant": obj.tenant,
+            job = fabric.submit(obj.tenant, obj.module, obj.n_chunks,
+                                now=now, priority=obj.priority,
+                                deadline_ms=obj.deadline_ms,
+                                affinity=obj.affinity)
+            meta[job.gid] = {"tenant": obj.tenant,
                              "priority": obj.priority,
                              "deadline_ms": obj.deadline_ms,
                              "n_chunks": obj.n_chunks}
         else:
-            if not state.complete(obj, now=now):
+            shell, a = obj
+            if not fabric.complete(shell, a, now=now):
                 continue                 # stale event for a preempted chunk
-            ts = starts.pop(obj.aid)
-            busy_time += (now - ts) * obj.rng.size
-            timeline.append((ts, now, (obj.rng.start, obj.rng.size),
-                             obj.rid))
+            ts = starts.pop(a.aid)
+            busy_time += (now - ts) * a.rng.size
+            busy_by_shell[shell] += (now - ts) * a.rng.size
+            job, _ = fabric.resolve(shell, a)
+            timeline.append((ts, now,
+                             (offsets[shell] + a.rng.start, a.rng.size),
+                             job.gid))
+            if policy.refine_cost_model and not a.reconfigure:
+                fabric.cost.observe(a.module, a.footprint, now - ts)
         dispatch(now)
 
-    assert all(r.complete for r in state.requests.values()), \
+    assert all(j.complete for j in fabric.jobs.values()), \
         "simulator finished with incomplete requests"
-    assert not state.alloc.busy, "simulator finished with busy slots"
-    assert not state.active, "simulator finished with in-flight chunks"
-    lat = {rid: r.t_finish - r.t_submit
-           for rid, r in state.requests.items()}
-    util = busy_time / (now * state.alloc.n) if now > 0 else 0.0
+    for st in fabric.states.values():
+        assert not st.alloc.busy, "simulator finished with busy slots"
+        assert not st.active, "simulator finished with in-flight chunks"
+    lat = {j.gid: j.t_finish - j.t_submit for j in fabric.jobs.values()}
+    util = busy_time / (now * total_slots) if now > 0 else 0.0
+    n_pre = sum(st.n_preemptions for st in fabric.states.values())
+    per_shell = {
+        name: {"offset": offsets[name], "n_slots": st.alloc.n,
+               "busy_ms": busy_by_shell[name],
+               "utilization": (busy_by_shell[name] / (now * st.alloc.n)
+                               if now > 0 else 0.0)}
+        for name, st in fabric.states.items()}
     return SimResult(now, util, reconfs, lat, timeline,
-                     preemptions=state.n_preemptions,
+                     preemptions=n_pre,
                      preempted_spans=preempted_spans,
                      wasted_time=wasted_time, request_meta=meta,
-                     n_slots=state.alloc.n)
+                     n_slots=total_slots, per_shell=per_shell,
+                     stolen_chunks=fabric.stats["stolen_chunks"])

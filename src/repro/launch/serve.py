@@ -89,6 +89,7 @@ def serve_daemon(run: DaemonServeRun, log=print) -> dict:
     """
     from repro.core import Daemon, PolicyConfig, Shell, default_registry, \
         uniform_shell
+    from repro.core.daemon import _now_ms
     from repro.core.simulator import p95
 
     n_dev = jax.device_count()
@@ -115,15 +116,14 @@ def serve_daemon(run: DaemonServeRun, log=print) -> dict:
                               deadline_ms=run.deadline_ms)
             # stamp completion when it happens — waiting sequentially
             # below would inflate the latency of handles that resolved
-            # while an earlier result() blocked
+            # while an earlier result() blocked.  JobHandle.t_submit is
+            # on the scheduler's millisecond clock, so stamp in ms too.
             h.future.add_done_callback(
-                lambda _, rid=h.rid: done_at.setdefault(
-                    rid, time.perf_counter()))
+                lambda _, rid=h.rid: done_at.setdefault(rid, _now_ms()))
             live_handles.append(h)
         for h in live_handles + batch_handles:
             h.future.result(timeout=600)
-        live_lat = [(done_at[h.rid] - h.t_submit) * 1e3
-                    for h in live_handles]
+        live_lat = [done_at[h.rid] - h.t_submit for h in live_handles]
         wall = time.perf_counter() - t0
         live_p95 = p95(live_lat)
         misses = sum(1 for l in live_lat if l > run.deadline_ms)

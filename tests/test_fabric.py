@@ -1,0 +1,306 @@
+"""Fabric: one scheduling contract over many shells.
+
+Multi-shell invariants of core/fabric.py:
+  - the degenerate one-shell fabric reproduces the seed single-shell
+    `simulate` byte-for-byte (same ids, same event order, same floats);
+  - every chunk completes exactly once across shells under preemption +
+    work stealing, and no shell's slots are ever double-booked;
+  - cross-shell stealing beats static per-shell partitioning by >= 1.2x
+    makespan on a skewed two-shell workload (the acceptance bound the
+    benchmark enforces too);
+  - locality-aware dispatch prefers the shell already hosting a module;
+  - `JobHandle.t_submit` and the scheduler clock share units (ms);
+  - `PolicyConfig.refine_cost_model` converges a mis-estimated module's
+    `est_chunk_ms` onto the observed chunk times;
+  - fabrics are registered, serialisable descriptors (fabrics.json).
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import Daemon, Fabric, FabricDescriptor, ImplAlt, \
+    ModuleDescriptor, PolicyConfig, Registry, Shell, SimJob, \
+    default_registry, simulate, uniform_shell
+from repro.core.daemon import _now_ms
+
+
+def _registry() -> Registry:
+    reg = Registry()
+    reg.register_module(ModuleDescriptor(
+        name="batch", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 40.0), ImplAlt("x2", 2, 22.0))))
+    reg.register_module(ModuleDescriptor(
+        name="inter", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 4.0), ImplAlt("x2", 2, 2.4))))
+    return reg
+
+
+def _check_spans_consistent(res, n_slots: int) -> None:
+    """Capacity + no double-booking over completed AND evicted spans
+    (shells occupy disjoint offset ranges on the global slot axis)."""
+    spans = list(res.timeline) + list(res.preempted_spans)
+    events = []
+    for t0, t1, (s, size), _ in spans:
+        events += [(t0, size), (t1, -size)]
+    busy = 0
+    for _, d in sorted(events, key=lambda e: (e[0], e[1])):
+        busy += d
+        assert busy <= n_slots
+    per_slot: dict[int, list] = {}
+    for t0, t1, (s, size), _ in spans:
+        for i in range(s, s + size):
+            per_slot.setdefault(i, []).append((t0, t1))
+    for slot_spans in per_slot.values():
+        slot_spans.sort()
+        for (a0, a1), (b0, b1) in zip(slot_spans, slot_spans[1:]):
+            assert b0 >= a1 - 1e-9, "slot double-booked"
+
+
+# -- seed equivalence ---------------------------------------------------------
+
+seed_jobs_strategy = st.lists(
+    st.tuples(st.floats(0, 200),
+              st.sampled_from(["u0", "u1", "hi"]),
+              st.sampled_from(["batch", "inter"]),
+              st.integers(1, 6),
+              st.integers(0, 3),
+              st.sampled_from([None, 15.0, 60.0])),
+    min_size=1, max_size=15)
+
+
+@given(seed_jobs_strategy, st.sampled_from([1, 2, 4]), st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_single_shell_fabric_matches_seed_simulate(raw, n_slots,
+                                                   preemptive):
+    """`simulate(reg, n_slots, ...)` and an explicitly-built one-shell
+    Fabric must agree on every metric, byte for byte."""
+    jobs = [SimJob(t, u, m, c, priority=p, deadline_ms=d)
+            for t, u, m, c, p, d in raw]
+    pol = PolicyConfig(preemptive=preemptive)
+    a = simulate(_registry(), n_slots, jobs, pol)
+    fab = Fabric({"shell0": n_slots}, _registry(), pol)
+    b = simulate(_registry(), fab, jobs)
+    assert a.makespan == b.makespan
+    assert a.utilization == b.utilization
+    assert a.reconfigurations == b.reconfigurations
+    assert a.request_latency == b.request_latency
+    assert a.timeline == b.timeline
+    assert a.preemptions == b.preemptions
+    assert a.preempted_spans == b.preempted_spans
+    assert a.wasted_time == b.wasted_time
+    assert a.request_meta == b.request_meta
+    assert a.per_shell == b.per_shell
+    assert a.stolen_chunks == b.stolen_chunks == 0
+
+
+# -- multi-shell exactly-once -------------------------------------------------
+
+multi_jobs_strategy = st.lists(
+    st.tuples(st.floats(0, 200),
+              st.sampled_from(["u0", "u1", "hi"]),
+              st.sampled_from(["batch", "inter"]),
+              st.integers(1, 6),
+              st.integers(0, 3),
+              st.sampled_from([None, "a", "b"])),
+    min_size=1, max_size=15)
+
+
+@given(multi_jobs_strategy,
+       st.sampled_from([(1, 1), (2, 1), (2, 2), (4, 2)]))
+@settings(max_examples=60, deadline=None)
+def test_every_chunk_completes_exactly_once_across_shells(raw, sizes):
+    """Preemption + stealing + affinity over two shells: each submitted
+    chunk still completes exactly once, capacity is never exceeded."""
+    jobs = [SimJob(t, u, m, c, priority=p, affinity=aff)
+            for t, u, m, c, p, aff in raw]
+    shells = {"a": sizes[0], "b": sizes[1]}
+    res = simulate(_registry(), shells, jobs,
+                   PolicyConfig(preemptive=True, steal=True))
+    done = Counter(rid for *_, rid in res.timeline)
+    for rid, meta in res.request_meta.items():
+        assert done[rid] == meta["n_chunks"], \
+            f"rid {rid}: {done[rid]} completions != {meta['n_chunks']}"
+    assert res.preemptions == len(res.preempted_spans)
+    _check_spans_consistent(res, sum(sizes))
+
+
+def test_stealing_improves_skewed_makespan():
+    """Acceptance: >= 1.2x makespan improvement from stealing vs static
+    per-shell partitioning on a skewed two-shell workload."""
+    reg = _registry()
+    jobs = [SimJob(2.0 * i, "heavy", "batch", 6, affinity="s0")
+            for i in range(10)]
+    jobs += [SimJob(0.0, "light", "inter", 2, affinity="s1")]
+    shells = {"s0": 2, "s1": 2}
+    static = simulate(reg, shells, jobs, PolicyConfig(steal=False))
+    steal = simulate(reg, shells, jobs, PolicyConfig(steal=True))
+    assert steal.stolen_chunks > 0
+    speedup = static.makespan / steal.makespan
+    assert speedup >= 1.2, f"stealing speedup {speedup:.2f}x < 1.2x"
+    # the idle shell actually absorbed work
+    assert steal.per_shell["s1"]["utilization"] > \
+        static.per_shell["s1"]["utilization"] + 0.2
+
+
+def test_locality_prefers_resident_shell():
+    """A job with no affinity goes to the shell already hosting its
+    module resident (dodging the reconfiguration penalty); with
+    locality off, dispatch is purely least-loaded (first shell wins
+    the tie)."""
+    for locality, expect_shell in ((True, "b"), (False, "a")):
+        reg = _registry()
+        fab = Fabric({"a": 2, "b": 2}, reg,
+                     PolicyConfig(steal=False, locality=locality))
+        fab.submit("t0", "inter", 1, now=0.0, affinity="b")
+        [(shell, a0)] = fab.schedule(now=0.0)
+        assert shell == "b"
+        fab.complete("b", a0, now=10.0)
+        fab.submit("t1", "inter", 1, now=20.0)      # no affinity
+        [(shell, _)] = fab.schedule(now=20.0)
+        assert shell == expect_shell, \
+            f"locality={locality} dispatched to {shell}"
+
+
+def test_fabric_affinity_unknown_shell_raises():
+    fab = Fabric({"a": 1}, _registry())
+    with pytest.raises(KeyError, match="unknown shell"):
+        fab.submit("t", "inter", 1, affinity="nope")
+
+
+# -- registry descriptors -----------------------------------------------------
+
+def test_registry_shell_unknown_message():
+    reg = default_registry()
+    with pytest.raises(KeyError, match="unknown shell 'nope'"):
+        reg.shell("nope")
+    with pytest.raises(KeyError, match="registered"):
+        reg.shell("nope")
+
+
+def test_registry_fabric_descriptor_roundtrip(tmp_path):
+    reg = default_registry()
+    assert reg.fabric("hostpair").shells == ("host8_s4", "host4_s4")
+    with pytest.raises(KeyError, match="unknown fabric"):
+        reg.fabric("nope")
+    # a fabric may only reference registered shells
+    with pytest.raises(KeyError, match="unknown shell"):
+        reg.register_fabric(FabricDescriptor("bad", ("ghost",)))
+    reg.save(tmp_path)
+    reg2 = Registry.load(tmp_path)
+    assert set(reg2.fabrics) == set(reg.fabrics)
+    fab = Fabric.from_registry(reg2, "hostpair")
+    assert [st.alloc.n for st in fab.states.values()] == [4, 4]
+    # pre-fabric saves (no fabrics.json) still load
+    (tmp_path / "fabrics.json").unlink()
+    reg3 = Registry.load(tmp_path)
+    assert reg3.fabrics == {}
+
+
+# -- cost-model refinement ----------------------------------------------------
+
+def test_cost_model_refinement_converges():
+    """A module whose registry estimate is 10x the true chunk time
+    converges onto the observed times when refine_cost_model is on,
+    and keeps the static estimate when it is off."""
+    def mk_reg():
+        reg = Registry()
+        reg.register_module(ModuleDescriptor(
+            name="m", entrypoint="x:y",
+            impls=(ImplAlt("x1", 1, 50.0,
+                           meta={"true_chunk_ms": 5.0}),)))
+        return reg
+
+    reg = mk_reg()
+    fab = Fabric({"s": 1}, reg, PolicyConfig(refine_cost_model=True))
+    jobs = [SimJob(100.0 * i, "t", "m", 4) for i in range(4)]
+    simulate(reg, fab, jobs)
+    assert abs(fab.cost.est_chunk_ms("m", 1) - 5.0) < 1.0, \
+        f"did not converge: {fab.cost.est_chunk_ms('m', 1)}"
+
+    reg2 = mk_reg()
+    fab2 = Fabric({"s": 1}, reg2, PolicyConfig(refine_cost_model=False))
+    simulate(reg2, fab2, jobs)
+    assert fab2.cost.est_chunk_ms("m", 1) == 50.0
+
+
+def test_daemon_refines_cost_model_from_wall_times():
+    spec = uniform_shell("host1_s1", (1, 1), 1)
+    reg = default_registry()
+    d = Daemon(Shell(spec), reg, PolicyConfig(refine_cost_model=True))
+    try:
+        rng = np.random.default_rng(0)
+        re = rng.uniform(-2, 1, (256, 256)).astype(np.float32)
+        im = rng.uniform(-1.5, 1.5, (256, 256)).astype(np.float32)
+        h = d.submit("t", "mandelbrot", [(re, im)] * 3)
+        assert len(h.future.result(timeout=300)) == 3
+        with d._lock:
+            # the first chunk reconfigures (not observed); later reuse
+            # chunks feed the EWMA with real wall times
+            assert ("mandelbrot", 1) in d.fabric.cost._est
+            assert d.fabric.cost.est_chunk_ms("mandelbrot", 1) > 0.0
+    finally:
+        d.shutdown()
+
+
+# -- daemon over a fabric -----------------------------------------------------
+
+def test_jobhandle_and_scheduler_share_ms_clock():
+    """Regression: JobHandle.t_submit was perf_counter() *seconds* while
+    the scheduler clock is milliseconds; both now use _now_ms()."""
+    spec = uniform_shell("host1_s1", (1, 1), 1)
+    reg = default_registry()
+    d = Daemon(Shell(spec), reg)
+    try:
+        rng = np.random.default_rng(2)
+        re = rng.uniform(-2, 1, (256, 256)).astype(np.float32)
+        im = rng.uniform(-1.5, 1.5, (256, 256)).astype(np.float32)
+        before = _now_ms()
+        h = d.submit("t", "mandelbrot", [(re, im)])
+        after = _now_ms()
+        assert before <= h.t_submit <= after
+        assert len(h.future.result(timeout=300)) == 1
+        with d._lock:
+            req = d.state.requests[h.rid]
+            # the scheduler request is stamped with the handle's clock
+            assert req.t_submit == h.t_submit
+    finally:
+        d.shutdown()
+
+
+def test_multi_shell_daemon_exactly_once():
+    """Two live shells (sharing the single CPU device): affinity routes
+    jobs, stealing may rebalance, and every chunk resolves exactly once
+    with consistent fabric state afterwards."""
+    import jax
+    devs = jax.devices()
+    shells = {"a": Shell(uniform_shell("fa", (1, 1), 1), devs),
+              "b": Shell(uniform_shell("fb", (1, 1), 1), devs)}
+    reg = default_registry()
+    d = Daemon(shells, reg, PolicyConfig())
+    try:
+        rng = np.random.default_rng(3)
+        re = rng.uniform(-2, 1, (256, 256)).astype(np.float32)
+        im = rng.uniform(-1.5, 1.5, (256, 256)).astype(np.float32)
+        img = rng.random((1024, 1024)).astype(np.float32)
+        h1 = d.submit("heavy", "mandelbrot", [(re, im)] * 4,
+                      affinity="a")
+        h2 = d.submit("light", "sobel", [(img,)], affinity="b")
+        out1 = h1.future.result(timeout=300)
+        out2 = h2.future.result(timeout=300)
+        assert len(out1) == 4 and len(out2) == 1
+        assert all(np.asarray(o).shape == (256, 256) for o in out1)
+        assert np.asarray(out2[0]).shape == (1024, 1024)
+        with d._lock:
+            assert not d._results and not d._handles
+            for st in d.fabric.states.values():
+                assert not st.alloc.busy and not st.active
+            assert all(j.complete for j in d.fabric.jobs.values())
+        # exactly-once even if idle shell b stole heavy chunks
+        assert d.stats["chunks"] == 5
+    finally:
+        d.shutdown()
