@@ -18,6 +18,16 @@ partitioning on the skewed trace (it approaches 2x as the skew deepens).
 A second scenario reports the locality win: alternating two modules with
 no affinity, locality-aware dispatch parks each module on its own shell
 and avoids almost all reconfigurations vs load-only dispatch.
+
+Heterogeneous section: a fast (speed 1.0) + slow (speed 0.25) two-shell
+fabric replays one no-affinity trace twice — `speed_aware=True` (ECT
+placement sees the true clocks) vs `speed_aware=False` (the scheduler
+plans as if both shells ran at the reference clock; true service times
+still apply).  Acceptance: speed-aware placement must win by >= 1.3x
+makespan.  A final row shows steal pricing on the same fabric: the
+speed-aware slow shell stops stealing chunks it cannot finish before
+the fast shell would anyway, and a prohibitive per-pair `transfer_ms`
+suppresses stealing entirely (enforced).
 """
 from __future__ import annotations
 
@@ -62,6 +72,16 @@ def locality_trace(n_jobs: int) -> list[SimJob]:
         mod = "batch" if i % 2 == 0 else "short"
         jobs.append(SimJob(3.0 * i, f"t{i % 3}", mod, 2))
     return jobs
+
+
+HETERO = {"fast": (2, 1.0), "slow": (2, 0.25)}
+
+
+def hetero_trace(n_jobs: int) -> list[SimJob]:
+    """No-affinity batch stream: placement alone decides which shell
+    generation each job lands on."""
+    return [SimJob(5.0 * i, f"t{i % 3}", "batch", 4)
+            for i in range(n_jobs)]
 
 
 def main(quick: bool = False) -> list[str]:
@@ -121,6 +141,67 @@ def main(quick: bool = False) -> list[str]:
         print(f"FAIL: locality-aware dispatch did not reduce "
               f"reconfigurations ({loc.reconfigurations} vs "
               f"{noloc.reconfigurations})", file=sys.stderr)
+        sys.exit(1)
+
+    # -- heterogeneous fabric: speed-aware vs speed-blind placement ---------
+    # stealing AND locality off so the rows isolate the dispatch
+    # decision (locality would pin the whole stream to whichever shell
+    # hosted the first job); the blind run schedules the identical
+    # hardware, it just cannot see the clocks
+    n_het = 6 if quick else 12
+    het = {}
+    for name, aware in (("aware", True), ("blind", False)):
+        r = simulate(reg, Fabric(HETERO, reg,
+                                 PolicyConfig(steal=False,
+                                              locality=False,
+                                              speed_aware=aware)),
+                     hetero_trace(n_het))
+        het[name] = r
+        per_shell = " ".join(
+            f"{s}_util={d['utilization']:.3f}"
+            for s, d in r.per_shell.items())
+        rows.append(row(
+            f"multi_shell/hetero/{name}/makespan", r.makespan * 1e3,
+            f"mean_lat={r.mean_latency:.0f}ms {per_shell}"))
+    het_speedup = het["blind"].makespan / max(het["aware"].makespan,
+                                              1e-9)
+    rows.append(row(
+        "multi_shell/hetero/aware_vs_blind", 0.0,
+        f"makespan_speedup={het_speedup:.2f}x (acceptance: >=1.3x)"))
+    if het_speedup < 1.3:
+        print(f"FAIL: speed-aware placement speedup "
+              f"{het_speedup:.2f}x < 1.3x", file=sys.stderr)
+        sys.exit(1)
+
+    # -- steal pricing: (a) speed — the slow shell stops stealing chunks
+    # it would finish later than the fast shell clearing its own
+    # backlog; (b) transfer — a per-pair payload-movement cost priced
+    # high enough suppresses stealing entirely, without hurting the
+    # makespan the victim achieves on its own
+    fast_backlog = [SimJob(2.0 * i, "heavy", "batch", 6, affinity="fast")
+                    for i in range(n_het)]
+    st_aware = simulate(reg, Fabric(HETERO, reg,
+                                    PolicyConfig(speed_aware=True)),
+                        fast_backlog)
+    st_blind = simulate(reg, Fabric(HETERO, reg,
+                                    PolicyConfig(speed_aware=False)),
+                        fast_backlog)
+    st_priced = simulate(
+        reg, Fabric(HETERO, reg, PolicyConfig(speed_aware=True),
+                    transfer={"fast->slow": 1e6, "slow->fast": 1e6}),
+        fast_backlog)
+    rows.append(row(
+        "multi_shell/hetero/steal_pricing", 0.0,
+        f"aware_stolen={st_aware.stolen_chunks} "
+        f"blind_stolen={st_blind.stolen_chunks} "
+        f"transfer_priced_stolen={st_priced.stolen_chunks} "
+        f"aware_makespan={st_aware.makespan:.0f}ms "
+        f"blind_makespan={st_blind.makespan:.0f}ms "
+        f"transfer_priced_makespan={st_priced.makespan:.0f}ms"))
+    if st_priced.stolen_chunks != 0:
+        print(f"FAIL: a prohibitive transfer cost did not suppress "
+              f"stealing ({st_priced.stolen_chunks} chunks stolen)",
+              file=sys.stderr)
         sys.exit(1)
     return rows
 

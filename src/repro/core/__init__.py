@@ -46,4 +46,11 @@ def default_registry() -> Registry:
                                                     "pod256_s8")))
     reg.register_fabric(FabricDescriptor("hostpair", ("host8_s4",
                                                       "host4_s4")))
+    # mixed board generations: a reference-clock shell next to a
+    # half-clock one, with a modeled 2 ms cross-host payload transfer
+    # per stolen chunk in either direction
+    reg.register_fabric(FabricDescriptor(
+        "hostpair_hetero", ("host8_s4", "host8_s4_lowclk"),
+        transfer_ms={"host8_s4->host8_s4_lowclk": 2.0,
+                     "host8_s4_lowclk->host8_s4": 2.0}))
     return reg

@@ -70,8 +70,11 @@ class Daemon:
             self.shells = {shell.spec.name: shell}
         self.shell = next(iter(self.shells.values()))
         self.registry = registry
+        # the ShellSpec carries the shell's slot count AND its relative
+        # speed, so a heterogeneous {name: Shell} fabric gets
+        # speed-aware placement for free
         self.fabric = Fabric(
-            {name: len(s.slots) for name, s in self.shells.items()},
+            {name: s.spec for name, s in self.shells.items()},
             registry, policy)
         self._modules: dict[str, AccelModule] = {}
         self._placements: dict[tuple[str, int, int], Placement] = {}
@@ -264,9 +267,16 @@ class Daemon:
                 self._events.put(("discarded", None))
                 return
             self.stats["chunks"] += 1
-            if err is None and not a.reconfigure \
-                    and self.policy.refine_cost_model:
-                self.fabric.cost.observe(a.module, a.footprint, t_run)
+            if err is None and self.policy.refine_cost_model:
+                # reconfigured chunks refine too — an always-
+                # reconfiguring module must not keep a stale estimate
+                # forever.  t_run wraps run_placement only, so unlike
+                # the simulator's elapsed time it never contains the
+                # reconfiguration cost (placement/compile happen before
+                # the clock starts) and nothing is subtracted here.
+                self.fabric.cost.observe(a.module, a.footprint,
+                                         max(1e-3, t_run),
+                                         self.fabric.speeds[shell_name])
             if entry is not None:
                 job, cmap = entry
                 gid, gchunk = job.gid, cmap[a.chunk]

@@ -21,7 +21,20 @@ fabric adds the cross-shell arbitration —
     tail (preemption victims requeued at the front go last), and every
     chunk still runs exactly once;
   - a shared `CostModel` so online `est_chunk_ms` refinement on any
-    shell improves placement everywhere.
+    shell improves placement everywhere;
+  - **heterogeneity awareness**: each shell carries a relative `speed`
+    (a chunk takes `est_chunk_ms / speed` there) and each (victim,
+    thief) pair a cross-shell `transfer_ms` per stolen chunk
+    (`PolicyConfig.transfer_ms` default, per-pair overrides from the
+    `FabricDescriptor`); no-affinity dispatch ranks shells by estimated
+    completion time instead of raw backlog, and a *priced* steal
+    (nonzero transfer, or unequal speeds) is skipped when the transfer
+    + the thief's (speed-scaled) service time would finish *later* than
+    the victim clearing its own backlog.  At all speeds 1.0 + transfer
+    0.0 the gate is inert and per-shell scheduling, chunk times and
+    stealing are unchanged; the one deliberate homogeneous-path change
+    is dispatch ranking, which weighs queues in estimated milliseconds
+    (ECT) rather than raw chunk counts.
 
 Identity model: all shells share one rid counter and one aid counter, so
 request/assignment ids are unique fabric-wide, and a job's global id
@@ -38,13 +51,21 @@ import itertools
 from collections import deque
 from typing import Any, Iterable, Mapping
 
+from repro.core.registry import parse_transfer_pair
 from repro.core.scheduler import Assignment, CostModel, PolicyConfig, \
     SchedulerState
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class FabricJob:
-    """One submitted job, tracked fabric-wide across its sub-requests."""
+    """One submitted job, tracked fabric-wide across its sub-requests.
+
+    `eq=False`: jobs compare (and hash) by identity.  Membership tests
+    against the admission queue must mean "this very job object" — a
+    value-based eq would deep-compare payload lists against every queued
+    job on each `finished()` poll (O(queue x payload), and wrong in
+    principle for two jobs with equal fields).
+    """
     gid: int
     tenant: str
     module: str
@@ -74,14 +95,19 @@ class FabricJob:
 class Fabric:
     """Named shells behind a single scheduling contract.
 
-    `shells` maps shell name -> slot count (or anything with an
-    `n_slots` attribute, e.g. a ShellSpec).  All shells share one
-    `PolicyConfig` and one `CostModel`.
+    `shells` maps shell name -> slot count (speed 1.0), an
+    `(n_slots, speed)` tuple, or anything with an `n_slots` attribute
+    and optional `speed`, e.g. a ShellSpec.  All shells share one
+    `PolicyConfig` and one `CostModel`.  `transfer` optionally maps
+    `(victim, thief)` pairs (or `"victim->thief"` strings) to the
+    modeled cross-shell payload-movement cost per stolen chunk,
+    overriding `PolicyConfig.transfer_ms` for that direction.
     """
 
     def __init__(self, shells: Mapping[str, Any], registry,
                  policy: PolicyConfig | None = None,
-                 cost: CostModel | None = None):
+                 cost: CostModel | None = None,
+                 transfer: Mapping[Any, float] | None = None):
         if not shells:
             raise ValueError("a fabric needs at least one shell")
         self.registry = registry
@@ -90,16 +116,37 @@ class Fabric:
         self._rid = itertools.count()        # fabric-wide id spaces
         self._aid = itertools.count()
         self.states: dict[str, SchedulerState] = {}
+        self.speeds: dict[str, float] = {}   # true relative clocks
         for name, n in shells.items():
-            n_slots = n if isinstance(n, int) else n.n_slots
-            st = SchedulerState(n_slots, registry, self.policy,
-                                cost=self.cost)
+            if isinstance(n, int):
+                n_slots, speed = n, 1.0
+            elif isinstance(n, tuple):
+                n_slots, speed = n
+            else:
+                n_slots = n.n_slots
+                speed = getattr(n, "speed", 1.0)
+            if speed <= 0:
+                raise ValueError(f"shell {name!r} speed must be "
+                                 f"positive, got {speed}")
+            self.speeds[name] = speed
+            # a speed-blind policy plans as if every shell ran at the
+            # reference clock (true times still apply in the executor)
+            st = SchedulerState(
+                n_slots, registry, self.policy, cost=self.cost,
+                speed=speed if self.policy.speed_aware else 1.0)
             st._rid = self._rid
             st._aid = self._aid
             self.states[name] = st
+        self._transfer: dict[tuple[str, str], float] = {}
+        for key, ms in (transfer or {}).items():
+            pair = parse_transfer_pair(key, self.states)
+            self._transfer[pair] = float(ms)
         self.jobs: dict[int, FabricJob] = {}
         # (shell_name, rid) -> (job, {local chunk id -> global chunk id})
         self._subs: dict[tuple[str, int], tuple[FabricJob, dict]] = {}
+        # (shell_name, rid) -> transfer cost per chunk of a stolen
+        # sub-request; the simulator realizes it in the chunk's time
+        self._sub_transfer: dict[tuple[str, int], float] = {}
         self._admission: deque[FabricJob] = deque()
         self._now = 0.0
         self.stats = {"dispatched": 0, "local_dispatch": 0,
@@ -108,10 +155,12 @@ class Fabric:
     @classmethod
     def from_registry(cls, registry, name: str,
                       policy: PolicyConfig | None = None) -> "Fabric":
-        """Build from a registered `FabricDescriptor` (fabrics.json)."""
+        """Build from a registered `FabricDescriptor` (fabrics.json);
+        shell speeds come from the ShellSpecs, per-pair transfer costs
+        from the descriptor."""
         desc = registry.fabric(name)
-        return cls({s: registry.shell(s).n_slots for s in desc.shells},
-                   registry, policy)
+        return cls({s: registry.shell(s) for s in desc.shells},
+                   registry, policy, transfer=desc.transfer_ms)
 
     # -- queries --------------------------------------------------------------
 
@@ -133,6 +182,15 @@ class Fabric:
         created directly on a shell state (legacy single-shell path)."""
         return self._subs.get((shell, rid))
 
+    def transfer_cost(self, shell: str, rid: int) -> float:
+        """Cross-shell transfer cost per chunk of a sub-request: the
+        priced (victim, thief) cost if the sub-request was stolen onto
+        this shell, else 0.0.  The simulator adds it to the stolen
+        chunk's service time so the modeled payload movement is
+        realized; the live daemon moves payloads in-process by
+        reference, so there it remains a planning model."""
+        return self._sub_transfer.get((shell, rid), 0.0)
+
     def finished(self, gid: int) -> bool:
         """Complete, or failed with no chunk still in flight anywhere."""
         job = self.jobs[gid]
@@ -153,9 +211,56 @@ class Fabric:
         """Does any of the shell's ranges host `module` resident?"""
         return any(m == module for m, _ in st.resident.values())
 
-    def _load(self, st: SchedulerState) -> float:
-        """Backlog + occupancy, normalised by shell size."""
-        return (self._pending(st) + len(st.alloc.busy)) / st.alloc.n
+    def _load(self, name: str) -> float:
+        """Backlog + occupancy, normalised by the shell's capacity in
+        reference-speed slot equivalents (`n_slots * speed`)."""
+        st = self.states[name]
+        return (self._pending(st) + len(st.alloc.busy)) / (
+            st.alloc.n * st.speed)
+
+    def _min_fp(self, module: str) -> int:
+        return min(self.registry.module(module).footprints)
+
+    def _transfer_ms(self, victim: str, thief: str) -> float:
+        return self._transfer.get((victim, thief),
+                                  self.policy.transfer_ms)
+
+    def _backlog_ms(self, name: str) -> float:
+        """Estimated milliseconds of work already committed to a shell:
+        queued chunks at the module's smallest footprint plus one chunk
+        estimate per in-flight assignment (including its reconfiguration
+        penalty, which that chunk is actually paying), at the shell's
+        (decision) speed."""
+        st = self.states[name]
+        total = 0.0
+        for q in st.queues.values():
+            for r in q:
+                if r.pending > 0:
+                    total += r.pending * self.cost.est_chunk_ms(
+                        r.module, self._min_fp(r.module), st.speed)
+        for a in st.active.values():
+            t = self.cost.est_chunk_ms(a.module, a.footprint, st.speed)
+            if a.reconfigure:
+                t += self.policy.reconfig_penalty_ms
+            total += t
+        return total
+
+    def _job_ms(self, job: FabricJob, shell: str) -> float:
+        """The job's own estimated work on a shell (min footprint)."""
+        return job.n_chunks * self.cost.est_chunk_ms(
+            job.module, self._min_fp(job.module),
+            self.states[shell].speed)
+
+    def _ect(self, name: str, job: FabricJob,
+             backlog: Mapping[str, float] | None = None) -> float:
+        """Estimated completion time of `job` if dispatched to `name`:
+        the shell's committed backlog plus the job's own chunks, spread
+        over the shell's slots at its speed.  This is what makes a fast
+        shell with a short queue beat an idle slow one.  `backlog` is an
+        optional precomputed per-shell `_backlog_ms` cache (one
+        admission drain walks every queue once, not once per job)."""
+        b = self._backlog_ms(name) if backlog is None else backlog[name]
+        return (b + self._job_ms(job, name)) / self.states[name].alloc.n
 
     # -- submission -----------------------------------------------------------
 
@@ -167,9 +272,23 @@ class Fabric:
         chunk count (simulation).  Dispatch to a shell happens at the
         next `schedule` call."""
         self.registry.module(module)         # validates, nice KeyError
-        if affinity is not None and affinity not in self.states:
-            raise KeyError(f"unknown shell {affinity!r} for affinity; "
-                           f"fabric shells: {sorted(self.states)}")
+        min_fp = self._min_fp(module)
+        if affinity is not None:
+            if affinity not in self.states:
+                raise KeyError(f"unknown shell {affinity!r} for "
+                               f"affinity; fabric shells: "
+                               f"{sorted(self.states)}")
+            if min_fp > self.states[affinity].alloc.n:
+                raise ValueError(
+                    f"module {module!r} needs at least {min_fp} slots "
+                    f"but shell {affinity!r} has "
+                    f"{self.states[affinity].alloc.n}; the job would "
+                    f"be unplaceable forever")
+        elif min_fp > max(st.alloc.n for st in self.states.values()):
+            raise ValueError(
+                f"module {module!r} needs at least {min_fp} slots but "
+                f"no shell in the fabric has that many; the job would "
+                f"be unplaceable forever")
         if isinstance(chunks, int):
             n_chunks, payloads = chunks, None
         else:
@@ -199,21 +318,30 @@ class Fabric:
 
     # -- dispatch -------------------------------------------------------------
 
-    def _pick_shell(self, job: FabricJob) -> str:
+    def _pick_shell(self, job: FabricJob,
+                    backlog: Mapping[str, float] | None = None) -> str:
         if job.affinity is not None:
-            return job.affinity
-        names = self.names
+            return job.affinity          # feasibility checked at submit
+        # never dispatch to a shell the module's smallest footprint can
+        # not fit even when empty — the job would queue there forever
+        min_fp = self._min_fp(job.module)
+        names = [n for n in self.names
+                 if min_fp <= self.states[n].alloc.n]
         if self.policy.locality:
             resident = [n for n in names
                         if self._hosts(self.states[n], job.module)]
             if resident:
                 names = resident
         order = {n: i for i, n in enumerate(self.names)}
-        return min(names, key=lambda n: (self._load(self.states[n]),
-                                         order[n]))
+        # estimated completion time, not raw backlog: an idle slow
+        # shell loses to a busy fast one when the fast one still
+        # finishes the job sooner (ties: load, then declaration order)
+        return min(names, key=lambda n: (self._ect(n, job, backlog),
+                                         self._load(n), order[n]))
 
-    def _dispatch(self, job: FabricJob) -> str:
-        shell = self._pick_shell(job)
+    def _dispatch(self, job: FabricJob,
+                  backlog: Mapping[str, float] | None = None) -> str:
+        shell = self._pick_shell(job, backlog)
         st = self.states[shell]
         if self.policy.locality and self._hosts(st, job.module):
             self.stats["local_dispatch"] += 1
@@ -231,8 +359,23 @@ class Fabric:
 
     def _steal_from(self, victim: str, thief: str, now: float) -> int:
         """Move tail chunks of the victim shell's most-backlogged request
-        onto the thief.  Returns the number of chunks moved."""
+        onto the thief.  Returns the number of chunks moved.
+
+        When the move has a heterogeneous price — a nonzero transfer
+        cost for this pair, or unequal shell speeds — a candidate is
+        skipped unless it wins: the transfer cost plus the thief's
+        (speed-scaled) service time, plus the reconfiguration penalty if
+        it does not already host the module, must beat the victim
+        clearing its backlog locally.  With transfer 0 and equal speeds
+        there is nothing to price and the gate is inert, so the
+        homogeneous stealing contract is exactly the PR 2 behavior.
+        """
         vst, tst = self.states[victim], self.states[thief]
+        transfer = self._transfer_ms(victim, thief)
+        priced = transfer > 0.0 or tst.speed != vst.speed
+        # time for the victim to drain what it already has, per slot
+        drain_ms = self._backlog_ms(victim) / vst.alloc.n if priced \
+            else 0.0
         best, best_key = None, None
         for q in vst.queues.values():
             for r in q:
@@ -241,9 +384,16 @@ class Fabric:
                 entry = self._subs.get((victim, r.rid))
                 if entry is None:
                     continue              # not fabric-managed: leave it
-                min_fp = min(self.registry.module(r.module).footprints)
+                min_fp = self._min_fp(r.module)
                 if min_fp > tst.alloc.largest_free():
                     continue              # thief can't host this module
+                if priced:
+                    thief_ms = transfer + self.cost.est_chunk_ms(
+                        r.module, min_fp, tst.speed)
+                    if not self._hosts(tst, r.module):
+                        thief_ms += self.policy.reconfig_penalty_ms
+                    if thief_ms >= drain_ms:
+                        continue          # the steal loses: leave it
                 key = (-r.pending, r.rid)
                 if best_key is None or key < best_key:
                     best, best_key = (r, entry, min_fp), key
@@ -274,6 +424,8 @@ class Fabric:
         job.subs.append((thief, sub.rid))
         self._subs[(thief, sub.rid)] = (
             job, {i: g for i, g in enumerate(global_ids)})
+        if transfer > 0.0:
+            self._sub_transfer[(thief, sub.rid)] = transfer
         self.stats["steals"] += 1
         self.stats["stolen_chunks"] += len(taken)
         return len(taken)
@@ -308,10 +460,16 @@ class Fabric:
         preemption victims are reported through `drain_preempted()`."""
         now = self._now if now is None else max(self._now, now)
         self._now = now
-        while self._admission:
-            job = self._admission.popleft()
-            if not job.failed:
-                self._dispatch(job)
+        if self._admission:
+            # one backlog walk for the whole drain; each dispatched
+            # job's own work is folded in incrementally, which is
+            # exactly what recomputing _backlog_ms would return
+            backlog = {n: self._backlog_ms(n) for n in self.states}
+            while self._admission:
+                job = self._admission.popleft()
+                if not job.failed:
+                    shell = self._dispatch(job, backlog)
+                    backlog[shell] += self._job_ms(job, shell)
         # one placed-set per shell for the whole pass: an assignment
         # issued here must not be preempted by a later steal-path
         # schedule call at the same instant (same-pass churn guard)
@@ -331,6 +489,10 @@ class Fabric:
         if not st.complete(a, now=now):
             return False
         self._now = max(self._now, now)
+        if st.requests[a.rid].finished:
+            # a drained stolen sub-request schedules no more chunks;
+            # release its transfer-price record (long-daemon hygiene)
+            self._sub_transfer.pop((shell, a.rid), None)
         entry = self._subs.get((shell, a.rid))
         if entry is not None:
             job, _ = entry

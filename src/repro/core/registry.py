@@ -79,24 +79,44 @@ class ModuleDescriptor:
         return getattr(importlib.import_module(mod), fn)
 
 
+def parse_transfer_pair(key, shells) -> tuple[str, str]:
+    """Validate a cross-shell transfer key — a `"victim->thief"` string
+    or a `(victim, thief)` tuple over `shells` — and return the pair.
+    Shared by `Registry.register_fabric` and `Fabric.__init__` so both
+    surfaces parse and reject identically."""
+    pair = tuple(key.split("->")) if isinstance(key, str) else tuple(key)
+    if len(pair) != 2 or any(s not in shells for s in pair):
+        raise ValueError(
+            f"transfer pair {key!r} must name two of the fabric's "
+            f"shells {sorted(shells)} as '<victim>-><thief>'")
+    return pair
+
+
 @dataclasses.dataclass(frozen=True)
 class FabricDescriptor:
     """A registered fabric: an ordered list of shell names scheduled as
     one unit (core/fabric.py).  Like shells and modules, a fabric is a
     serialisable descriptor (fabrics.json), so the scale-out topology is
     swappable without touching any other component.
+
+    `transfer_ms` maps `"victim->thief"` shell pairs to the modeled
+    cross-shell payload-movement cost per stolen chunk, overriding the
+    fabric-wide `PolicyConfig.transfer_ms` default for that direction
+    (e.g. boards on different hosts cost more than same-host shells).
     """
     name: str
     shells: tuple[str, ...]
+    transfer_ms: dict = dataclasses.field(default_factory=dict)
     meta: dict = dataclasses.field(default_factory=dict)
 
     def to_json(self):
         return {"name": self.name, "shells": list(self.shells),
-                "meta": self.meta}
+                "transfer_ms": self.transfer_ms, "meta": self.meta}
 
     @staticmethod
     def from_json(d):
         return FabricDescriptor(d["name"], tuple(d["shells"]),
+                                d.get("transfer_ms", {}),
                                 d.get("meta", {}))
 
 
@@ -119,6 +139,14 @@ class Registry:
     def register_fabric(self, desc: FabricDescriptor) -> None:
         for s in desc.shells:
             self.shell(s)              # fail fast on unknown shell names
+        for pair in desc.transfer_ms:
+            # descriptors must stay JSON-serialisable: tuple keys would
+            # register fine but crash every later save()
+            if not isinstance(pair, str):
+                raise ValueError(
+                    f"descriptor transfer_ms keys must be "
+                    f"'<victim>-><thief>' strings, got {pair!r}")
+            parse_transfer_pair(pair, desc.shells)
         self.fabrics[desc.name] = desc
 
     def module(self, name: str) -> ModuleDescriptor:

@@ -127,9 +127,18 @@ class PolicyConfig:
     # backlog (only meaningful for multi-shell fabrics, elastic mode)
     steal: bool = True
     # EWMA-refine est_chunk_ms per (module, footprint) from observed
-    # chunk service times (daemon: wall clock; simulator: true times)
+    # chunk service times (daemon: wall clock; simulator: true times);
+    # reconfigured chunks are observed too, at elapsed - reconfig penalty
     refine_cost_model: bool = False
     refine_alpha: float = 0.3             # weight of the newest observation
+    # -- fabric heterogeneity (core/fabric.py) ---------------------------
+    # modeled cross-shell payload-movement cost per stolen chunk; a
+    # Fabric / FabricDescriptor may override it per (victim, thief) pair
+    transfer_ms: float = 0.0
+    # inform placement and steal economics with true per-shell speeds;
+    # False treats every shell as speed 1.0 for *decisions* (the
+    # benchmark's speed-blind baseline — true service times still apply)
+    speed_aware: bool = True
 
 
 class CostModel:
@@ -140,6 +149,13 @@ class CostModel:
     chunk service times (`observe`).  One instance is shared by every
     SchedulerState in a Fabric so an observation on any shell improves
     placement everywhere.
+
+    Estimates are stored speed-normalised (a speed-1.0 shell's time):
+    `est_chunk_ms(..., speed=s)` divides by the querying shell's speed,
+    and `observe(..., speed=s)` multiplies the wall time back, so an
+    observation on a slow shell still refines placement on a fast one.
+    Speed 1.0 is the exact identity — the homogeneous path returns the
+    same floats as before.
     """
 
     def __init__(self, registry, alpha: float = 0.3):
@@ -147,14 +163,18 @@ class CostModel:
         self.alpha = alpha
         self._est: dict[tuple[str, int], float] = {}
 
-    def est_chunk_ms(self, module: str, footprint: int) -> float:
+    def est_chunk_ms(self, module: str, footprint: int,
+                     speed: float = 1.0) -> float:
         v = self._est.get((module, footprint))
-        if v is not None:
-            return v
-        return self.registry.module(module).impl_for(footprint).est_chunk_ms
+        if v is None:
+            v = self.registry.module(module).impl_for(
+                footprint).est_chunk_ms
+        return v / speed
 
-    def observe(self, module: str, footprint: int, ms: float) -> None:
+    def observe(self, module: str, footprint: int, ms: float,
+                speed: float = 1.0) -> None:
         key = (module, footprint)
+        ms = ms * speed
         prev = self._est.get(key)
         self._est[key] = ms if prev is None else \
             self.alpha * ms + (1.0 - self.alpha) * prev
@@ -163,10 +183,13 @@ class CostModel:
 class SchedulerState:
     def __init__(self, n_slots: int, registry,
                  policy: PolicyConfig | None = None,
-                 cost: CostModel | None = None):
+                 cost: CostModel | None = None, speed: float = 1.0):
         self.alloc = BuddyAllocator(n_slots)
         self.registry = registry
         self.policy = policy or PolicyConfig()
+        # relative clock of the hosting shell: this shell serves a chunk
+        # in est_chunk_ms / speed (1.0 = the homogeneous seed behavior)
+        self.speed = speed
         self.cost = cost or CostModel(registry, self.policy.refine_alpha)
         self.queues: dict[str, deque[Request]] = {}
         # least-recently-served round robin: new tenants get priority
@@ -360,7 +383,7 @@ class SchedulerState:
 
         best = None  # (rate, reuse, fp, range, reconfigure)
         for fp in fps:
-            est = self.cost.est_chunk_ms(req.module, fp)
+            est = self.cost.est_chunk_ms(req.module, fp, self.speed)
             reuse = free_reuse_range(fp)
             n_avail = self._n_free_ranges(fp)
             conc = max(1, min(req.pending, n_avail))

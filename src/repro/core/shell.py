@@ -37,16 +37,24 @@ class SlotSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ShellSpec:
-    """Logical shell description (the paper's shell JSON, Listing 1)."""
+    """Logical shell description (the paper's shell JSON, Listing 1).
+
+    `speed` is the shell's relative clock (1.0 = the reference board):
+    a chunk estimated at `est_chunk_ms` on the reference takes
+    `est_chunk_ms / speed` here.  It feeds the fabric's heterogeneity-
+    aware placement and the simulator's true chunk times.
+    """
     name: str
     grid: tuple[int, int]          # device grid (rows, cols)
     axes: tuple[str, str] = ("data", "model")
     slots: tuple[SlotSpec, ...] = ()
     version: str = "1"
+    speed: float = 1.0             # relative clock (1.0 = reference)
 
     def to_json(self) -> dict:
         return {"name": self.name, "grid": list(self.grid),
                 "axes": list(self.axes), "version": self.version,
+                "speed": self.speed,
                 "regions": [s.to_json() for s in self.slots]}
 
     @staticmethod
@@ -55,7 +63,7 @@ class ShellSpec:
             d["name"], tuple(d["grid"]), tuple(d.get("axes",
                                                      ("data", "model"))),
             tuple(SlotSpec.from_json(s) for s in d["regions"]),
-            d.get("version", "1"))
+            d.get("version", "1"), d.get("speed", 1.0))
 
     @property
     def n_slots(self) -> int:
@@ -82,7 +90,7 @@ class ShellSpec:
 
 
 def uniform_shell(name: str, grid: tuple[int, int], n_slots: int,
-                  axis: int = 1) -> ShellSpec:
+                  axis: int = 1, speed: float = 1.0) -> ShellSpec:
     """Split the grid into n homogeneous adjacent slots along `axis`."""
     assert grid[axis] % n_slots == 0
     slots = []
@@ -94,7 +102,7 @@ def uniform_shell(name: str, grid: tuple[int, int], n_slots: int,
             origin = (i * (grid[0] // n_slots), 0)
             shape = (grid[0] // n_slots, grid[1])
         slots.append(SlotSpec(f"slot{i}", origin, shape))
-    spec = ShellSpec(name, grid, slots=tuple(slots))
+    spec = ShellSpec(name, grid, slots=tuple(slots), speed=speed)
     spec.validate()
     return spec
 
@@ -110,6 +118,10 @@ def production_shells() -> dict[str, ShellSpec]:
         "host8_s4": uniform_shell("host8_s4", (1, 8), 4),
         "host8_s2": uniform_shell("host8_s2", (1, 8), 2),
         "host4_s4": uniform_shell("host4_s4", (1, 4), 4),
+        # a previous-generation board at half the reference clock, for
+        # heterogeneous fabrics (mixed board generations / edge+cloud)
+        "host8_s4_lowclk": uniform_shell("host8_s4_lowclk", (1, 8), 4,
+                                         speed=0.5),
     }
 
 

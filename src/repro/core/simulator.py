@@ -23,10 +23,12 @@ Every submitted chunk therefore still completes exactly once, even when
 idle shells steal pending chunks across the fabric.
 
 Cost model: the *actual* simulated chunk time comes from the registry
-(`ImplAlt.meta["true_chunk_ms"]` when present, else `est_chunk_ms`), so a
+(`ImplAlt.meta["true_chunk_ms"]` when present, else `est_chunk_ms`),
+divided by the hosting shell's `speed` (heterogeneous fabrics), so a
 mis-estimated module can be modeled; with `PolicyConfig.refine_cost_model`
 the fabric's shared `CostModel` EWMA-converges its estimates (used by
-placement decisions) onto the observed true times.
+placement decisions) onto the observed true times — reconfigured chunks
+included, at elapsed minus the modeled penalty.
 """
 from __future__ import annotations
 
@@ -115,12 +117,16 @@ class SimResult:
 
 
 def chunk_time_ms(registry: Registry, a: Assignment,
-                  policy: PolicyConfig) -> float:
+                  policy: PolicyConfig, speed: float = 1.0) -> float:
     """True simulated service time of an assignment (the cost-model
-    estimate may diverge; see `ImplAlt.meta["true_chunk_ms"]`)."""
+    estimate may diverge; see `ImplAlt.meta["true_chunk_ms"]`).
+
+    `speed` is the hosting shell's relative clock: compute scales by
+    1/speed; the reconfiguration penalty does not (the configuration
+    port is modeled as generation-independent)."""
     desc = registry.module(a.module)
     impl = desc.impl_for(a.footprint)
-    t = impl.meta.get("true_chunk_ms", impl.est_chunk_ms)
+    t = impl.meta.get("true_chunk_ms", impl.est_chunk_ms) / speed
     if a.reconfigure:
         t += policy.reconfig_penalty_ms
     return t
@@ -178,11 +184,16 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
     starts: dict[int, float] = {}       # aid -> dispatch time
     meta: dict[int, dict] = {}
     busy_by_shell: dict[str, float] = {n: 0.0 for n in fabric.states}
+    # transfer is paid once per stolen chunk — a preempted rerun of the
+    # same chunk does not move the payload again
+    paid_chunks: set[tuple[str, int, int]] = set()
+    charged: dict[int, float] = {}      # aid -> transfer charged
 
     def dispatch(t0: float):
         nonlocal seq, busy_time, wasted_time, reconfs
         new = fabric.schedule(now=t0)
         for shell, v in fabric.drain_preempted():
+            charged.pop(v.aid, None)
             ts = starts.pop(v.aid)
             busy_time += (t0 - ts) * v.rng.size
             busy_by_shell[shell] += (t0 - ts) * v.rng.size
@@ -192,7 +203,19 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
                 (ts, t0, (offsets[shell] + v.rng.start, v.rng.size),
                  job.gid))
         for shell, a in new:
-            dt = chunk_time_ms(registry, a, policy)
+            # stolen chunks also pay the priced cross-shell payload
+            # movement — the latency the steal gate reasons about is
+            # realized in the simulated world, not just planned for
+            tr = fabric.transfer_cost(shell, a.rid)
+            if tr > 0.0:
+                ck = (shell, a.rid, a.chunk)
+                if ck in paid_chunks:
+                    tr = 0.0            # rerun: payload already moved
+                else:
+                    paid_chunks.add(ck)
+                    charged[a.aid] = tr
+            dt = chunk_time_ms(registry, a, policy,
+                               fabric.speeds[shell]) + tr
             if a.reconfigure:
                 reconfs += 1
             starts[a.aid] = t0
@@ -221,8 +244,21 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
             timeline.append((ts, now,
                              (offsets[shell] + a.rng.start, a.rng.size),
                              job.gid))
-            if policy.refine_cost_model and not a.reconfigure:
-                fabric.cost.observe(a.module, a.footprint, now - ts)
+            if policy.refine_cost_model:
+                # reconfigured chunks are observed too, minus the
+                # modeled penalty — a module that always reconfigures
+                # must still refine its estimate; likewise the transfer
+                # actually charged to this attempt is not the module's
+                # own time
+                extra = charged.get(a.aid, 0.0)
+                if a.reconfigure:
+                    extra += policy.reconfig_penalty_ms
+                elapsed = now - ts
+                if extra > 0.0:
+                    elapsed = max(1e-3, elapsed - extra)
+                fabric.cost.observe(a.module, a.footprint, elapsed,
+                                    fabric.speeds[shell])
+            charged.pop(a.aid, None)
         dispatch(now)
 
     assert all(j.complete for j in fabric.jobs.values()), \

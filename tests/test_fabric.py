@@ -11,8 +11,16 @@ Multi-shell invariants of core/fabric.py:
   - locality-aware dispatch prefers the shell already hosting a module;
   - `JobHandle.t_submit` and the scheduler clock share units (ms);
   - `PolicyConfig.refine_cost_model` converges a mis-estimated module's
-    `est_chunk_ms` onto the observed chunk times;
-  - fabrics are registered, serialisable descriptors (fabrics.json).
+    `est_chunk_ms` onto the observed chunk times — including a module
+    that reconfigures on every chunk (observed at elapsed - penalty);
+  - fabrics are registered, serialisable descriptors (fabrics.json);
+  - heterogeneity: per-shell `speed` scales true chunk times and drives
+    ECT-based placement; cross-shell `transfer_ms` prices stealing; the
+    all-speeds-1.0 / transfer-0.0 fabric is byte-identical to the
+    homogeneous contract;
+  - dispatch feasibility: a shell the module's smallest footprint can
+    never fit is excluded, and an infeasible `affinity=` pin raises at
+    submit instead of wedging the executor.
 """
 from __future__ import annotations
 
@@ -23,8 +31,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings
 
-from repro.core import Daemon, Fabric, FabricDescriptor, ImplAlt, \
-    ModuleDescriptor, PolicyConfig, Registry, Shell, SimJob, \
+from repro.core import Daemon, Fabric, FabricDescriptor, FabricJob, \
+    ImplAlt, ModuleDescriptor, PolicyConfig, Registry, Shell, SimJob, \
     default_registry, simulate, uniform_shell
 from repro.core.daemon import _now_ms
 
@@ -37,6 +45,10 @@ def _registry() -> Registry:
     reg.register_module(ModuleDescriptor(
         name="inter", entrypoint="x:y",
         impls=(ImplAlt("x1", 1, 4.0), ImplAlt("x2", 2, 2.4))))
+    # smallest footprint 2: can never fit a 1-slot shell
+    reg.register_module(ModuleDescriptor(
+        name="wide", entrypoint="x:y",
+        impls=(ImplAlt("x2", 2, 10.0),)))
     return reg
 
 
@@ -243,6 +255,333 @@ def test_daemon_refines_cost_model_from_wall_times():
             # chunks feed the EWMA with real wall times
             assert ("mandelbrot", 1) in d.fabric.cost._est
             assert d.fabric.cost.est_chunk_ms("mandelbrot", 1) > 0.0
+    finally:
+        d.shutdown()
+
+
+# -- heterogeneity: speeds, transfer cost, ECT placement ----------------------
+
+@given(multi_jobs_strategy,
+       st.sampled_from([(1, 1), (2, 1), (2, 2), (4, 2)]),
+       st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_speed_one_transfer_zero_matches_homogeneous(raw, sizes,
+                                                     preemptive):
+    """Every construction spelling of a homogeneous fabric — plain slot
+    counts, `(n_slots, 1.0)` tuples, explicit zero per-pair transfer
+    overrides — must agree byte-for-byte.  (PR 2 identity itself is
+    anchored separately: the single-shell path by the seed-equivalence
+    test above, the steal contract by
+    test_homogeneous_steal_contract_pins_pr2_values; dispatch ranking
+    deliberately changed, see
+    test_homogeneous_dispatch_weighs_queues_by_estimated_work.)"""
+    jobs = [SimJob(t, u, m, c, priority=p, affinity=aff)
+            for t, u, m, c, p, aff in raw]
+    a = simulate(_registry(), {"a": sizes[0], "b": sizes[1]}, jobs,
+                 PolicyConfig(preemptive=preemptive, steal=True))
+    fab = Fabric({"a": (sizes[0], 1.0), "b": (sizes[1], 1.0)},
+                 _registry(),
+                 PolicyConfig(preemptive=preemptive, steal=True,
+                              transfer_ms=0.0),
+                 transfer={("a", "b"): 0.0, "b->a": 0.0})
+    b = simulate(_registry(), fab, jobs)
+    assert a.makespan == b.makespan
+    assert a.utilization == b.utilization
+    assert a.reconfigurations == b.reconfigurations
+    assert a.request_latency == b.request_latency
+    assert a.timeline == b.timeline
+    assert a.preemptions == b.preemptions
+    assert a.preempted_spans == b.preempted_spans
+    assert a.wasted_time == b.wasted_time
+    assert a.per_shell == b.per_shell
+    assert a.stolen_chunks == b.stolen_chunks
+
+
+@given(multi_jobs_strategy,
+       st.sampled_from([(1, 1), (2, 1), (2, 2), (4, 2)]),
+       st.sampled_from([(0.5, 2.0), (1.0, 0.25), (2.0, 1.0)]))
+@settings(max_examples=60, deadline=None)
+def test_exactly_once_under_mixed_speeds(raw, sizes, speeds):
+    """Preemption + stealing + affinity over shells of different speeds
+    and a nonzero transfer cost: every chunk still completes exactly
+    once and capacity is never exceeded."""
+    jobs = [SimJob(t, u, m, c, priority=p, affinity=aff)
+            for t, u, m, c, p, aff in raw]
+    shells = {"a": (sizes[0], speeds[0]), "b": (sizes[1], speeds[1])}
+    res = simulate(_registry(), shells, jobs,
+                   PolicyConfig(preemptive=True, steal=True,
+                                transfer_ms=1.0))
+    done = Counter(rid for *_, rid in res.timeline)
+    for rid, meta in res.request_meta.items():
+        assert done[rid] == meta["n_chunks"], \
+            f"rid {rid}: {done[rid]} completions != {meta['n_chunks']}"
+    assert res.preemptions == len(res.preempted_spans)
+    _check_spans_consistent(res, sum(sizes))
+
+
+def test_simulator_scales_chunk_time_by_speed():
+    """True chunk time is est/speed; the reconfiguration penalty is
+    speed-independent (the configuration port does not scale)."""
+    for speed, expect in ((1.0, 45.0), (2.0, 25.0), (0.5, 85.0)):
+        res = simulate(_registry(), {"s": (1, speed)},
+                       [SimJob(0.0, "t", "batch", 1)])
+        assert res.makespan == expect, (speed, res.makespan)
+
+
+def test_ect_placement_prefers_fast_shell():
+    """With speed awareness, an idle slow shell loses the dispatch to a
+    fast shell that finishes sooner; a speed-blind policy falls back to
+    the declaration-order tie-break and parks the job on the slow
+    shell."""
+    for aware, expect in ((True, "fast"), (False, "slow")):
+        fab = Fabric({"slow": (1, 0.25), "fast": (1, 1.0)}, _registry(),
+                     PolicyConfig(locality=False, steal=False,
+                                  speed_aware=aware))
+        fab.submit("t", "inter", 1, now=0.0)
+        [(shell, _)] = fab.schedule(now=0.0)
+        assert shell == expect, f"speed_aware={aware} -> {shell}"
+
+
+def test_homogeneous_dispatch_weighs_queues_by_estimated_work():
+    """Pin the deliberate homogeneous-path change to dispatch: ECT
+    ranking weighs queued work in estimated milliseconds, so a few
+    cheap pending chunks beat fewer expensive ones (PR 2's raw
+    chunk-count load ranking chose the other shell)."""
+    fab = Fabric({"a": 1, "b": 1}, _registry(),
+                 PolicyConfig(locality=False, steal=False))
+    fab.submit("t0", "batch", 3, now=0.0, affinity="a")  # 40 ms chunks
+    fab.submit("t1", "inter", 4, now=0.0, affinity="b")  # 4 ms chunks
+    fab.schedule(now=0.0)
+    # a: 1 in-flight + 2 pending batch (~125 est-ms); b: 1 in-flight +
+    # 3 pending inter (~21 est-ms).  PR 2 load ranking: a has fewer
+    # chunks (3 < 4) -> a.  ECT: b clears sooner -> b.
+    j = fab.submit("t2", "inter", 1, now=0.0)
+    fab.schedule(now=0.0)
+    assert fab.jobs[j.gid].subs[0][0] == "b"
+
+
+def test_transfer_not_recharged_on_preempted_rerun():
+    """Transfer is paid once per stolen chunk: a preempted rerun of the
+    same chunk does not move the payload (or pay the cost) again."""
+    jobs = [SimJob(0.0, "lo", "batch", 2, affinity="v", priority=0),
+            SimJob(1.0, "hi", "inter", 1, affinity="t", priority=5)]
+    res = simulate(_registry(), {"v": 1, "t": 1}, jobs,
+                   PolicyConfig(steal=True, preemptive=True,
+                                transfer_ms=10.0))
+    # chunk 1 is stolen onto t (paying 10 ms transfer), evicted by the
+    # priority-5 arrival, and re-run on t without paying transfer
+    # again: 45 ms rerun starting when "hi" finishes at t=10.
+    assert res.stolen_chunks == 1 and res.preemptions == 1
+    assert res.makespan == 55.0, res.makespan
+
+
+def test_homogeneous_steal_contract_pins_pr2_values():
+    """Regression: the steal-economics gate must be inert at transfer 0
+    and equal speeds.  Under the PR 2 contract this exact trace steals
+    one chunk and finishes at 9.0 ms; an over-eager gate (pricing the
+    thief's reconfiguration against a small backlog) skipped the steal
+    and regressed the makespan to 13.0 ms."""
+    res = simulate(_registry(), {"v": 1, "t": 1},
+                   [SimJob(0.0, "t0", "inter", 2, affinity="v")],
+                   PolicyConfig(steal=True))
+    assert res.stolen_chunks == 1
+    assert res.makespan == 9.0
+
+
+def test_steal_skipped_when_transfer_cost_loses():
+    """A thief whose transfer cost + service time cannot beat the victim
+    draining its own backlog must not steal; with transfer 0 the same
+    trace steals."""
+    jobs = [SimJob(0.0, "t", "batch", 4, affinity="v")]
+    shells = {"v": 1, "t": 1}
+    free = simulate(_registry(), shells, jobs,
+                    PolicyConfig(steal=True, transfer_ms=0.0))
+    assert free.stolen_chunks > 0
+    priced = simulate(_registry(), shells, jobs,
+                      PolicyConfig(steal=True, transfer_ms=1000.0))
+    assert priced.stolen_chunks == 0
+    no_steal = simulate(_registry(), shells, jobs,
+                        PolicyConfig(steal=False))
+    assert priced.makespan == no_steal.makespan
+    assert free.makespan < priced.makespan
+
+
+def test_simulator_realizes_transfer_latency():
+    """The priced transfer cost is charged to the stolen chunk's
+    simulated time — and excluded from refinement observations — not
+    just used to gate the steal decision."""
+    jobs = [SimJob(0.0, "t0", "batch", 2, affinity="v")]
+    shells = {"v": 1, "t": 1}
+    free = simulate(_registry(), shells, jobs, PolicyConfig(steal=True))
+    fab = Fabric(shells, _registry(),
+                 PolicyConfig(steal=True, transfer_ms=10.0,
+                              refine_cost_model=True))
+    priced = simulate(_registry(), fab, jobs)
+    assert free.stolen_chunks == priced.stolen_chunks == 1
+    assert priced.makespan == free.makespan + 10.0
+    # the observation backs out penalty + transfer: est stays exact
+    assert fab.cost.est_chunk_ms("batch", 1) == 40.0
+
+
+def test_per_pair_transfer_override():
+    """FabricDescriptor/Fabric per-pair transfer costs override the
+    PolicyConfig default, per direction."""
+    fab = Fabric({"a": 1, "b": 1}, _registry(),
+                 PolicyConfig(transfer_ms=3.0),
+                 transfer={"a->b": 7.0})
+    assert fab._transfer_ms("a", "b") == 7.0
+    assert fab._transfer_ms("b", "a") == 3.0     # policy default
+    with pytest.raises(ValueError, match="transfer pair"):
+        Fabric({"a": 1}, _registry(), transfer={"a->ghost": 1.0})
+
+
+def test_hetero_fabric_from_registry():
+    """Shell speeds come from the ShellSpecs and per-pair transfer costs
+    from the FabricDescriptor; both survive a save/load roundtrip."""
+    reg = default_registry()
+    fab = Fabric.from_registry(reg, "hostpair_hetero")
+    assert fab.speeds == {"host8_s4": 1.0, "host8_s4_lowclk": 0.5}
+    assert fab._transfer_ms("host8_s4", "host8_s4_lowclk") == 2.0
+    with pytest.raises(ValueError, match="transfer pair"):
+        reg.register_fabric(FabricDescriptor(
+            "bad", ("host8_s4",), transfer_ms={"host8_s4->ghost": 1.0}))
+    # tuple keys would crash every later save(): rejected up front
+    with pytest.raises(ValueError, match="strings"):
+        reg.register_fabric(FabricDescriptor(
+            "bad2", ("host8_s4", "host4_s4"),
+            transfer_ms={("host8_s4", "host4_s4"): 1.0}))
+
+
+def test_shellspec_speed_json_roundtrip(tmp_path):
+    reg = default_registry()
+    reg.save(tmp_path)
+    reg2 = Registry.load(tmp_path)
+    assert reg2.shell("host8_s4_lowclk").speed == 0.5
+    assert reg2.shell("host8_s4").speed == 1.0
+    assert reg2.fabric("hostpair_hetero").transfer_ms == \
+        reg.fabric("hostpair_hetero").transfer_ms
+
+
+# -- dispatch feasibility (regression: unplaceable-forever jobs) --------------
+
+def test_dispatch_skips_too_small_shell():
+    """Regression: least-loaded dispatch used to pick the 1-slot shell
+    for a footprint-2 module (load tie, declaration order), wedging the
+    simulator with an unplaceable job.  Too-small shells are excluded
+    now."""
+    res = simulate(_registry(), {"small": 1, "big": 2},
+                   [SimJob(0.0, "t", "wide", 2)])
+    assert res.request_latency and res.makespan > 0
+    assert res.per_shell["big"]["busy_ms"] > 0
+    assert res.per_shell["small"]["busy_ms"] == 0
+
+
+def test_infeasible_affinity_raises_at_submit():
+    """An affinity pin to a shell the module can never fit fails fast
+    with ValueError instead of queueing forever."""
+    fab = Fabric({"small": 1, "big": 2}, _registry())
+    with pytest.raises(ValueError, match="unplaceable forever"):
+        fab.submit("t", "wide", 1, affinity="small")
+    # no shell at all can host the module -> same failure, no affinity
+    fab1 = Fabric({"small": 1}, _registry())
+    with pytest.raises(ValueError, match="unplaceable forever"):
+        fab1.submit("t", "wide", 1)
+
+
+def test_daemon_infeasible_affinity_raises():
+    """Regression: the daemon future for an unplaceable job never
+    resolved; submit now raises before any state is created."""
+    spec = uniform_shell("host1_s1", (1, 1), 1)
+    reg = default_registry()
+    reg.register_module(ModuleDescriptor(
+        name="wide", entrypoint="x:y",
+        impls=(ImplAlt("x2", 2, 1.0),)))
+    d = Daemon(Shell(spec), reg)
+    try:
+        with pytest.raises(ValueError, match="unplaceable forever"):
+            d.submit("t", "wide", [(None,)], affinity="host1_s1")
+        with d._lock:
+            assert not d._handles and not d._results
+    finally:
+        d.shutdown()
+
+
+# -- FabricJob identity (regression: value-eq admission membership) -----------
+
+def test_fabricjob_membership_is_identity_based():
+    """FabricJob compares by identity: two field-identical jobs are
+    distinct queue entries, and `finished()` stays correct for a job
+    aborted before dispatch."""
+    a = FabricJob(0, "t", "m", 1)
+    b = FabricJob(0, "t", "m", 1)
+    assert a != b and a == a               # eq=False: identity semantics
+    fab = Fabric({"s": 1}, _registry())
+    j1 = fab.submit("t", "inter", 1, now=0.0)
+    j2 = fab.submit("t", "inter", 1, now=0.0)
+    fab.abort(j2.gid)
+    # undispatched + failed -> finished; the live j1 is not
+    assert fab.finished(j2.gid)
+    assert not fab.finished(j1.gid)
+    [(shell, a0)] = fab.schedule(now=0.0)
+    assert fab.jobs[j1.gid].subs and not fab.jobs[j2.gid].subs
+    assert fab.complete(shell, a0, now=1.0)
+    assert fab.finished(j1.gid)
+
+
+# -- refinement observes reconfigured chunks (regression) ---------------------
+
+def test_refinement_converges_for_always_reconfiguring_module():
+    """A module that pays the reconfiguration penalty on every chunk
+    (ping-ponging residency on one slot) used to never refine its
+    estimate; it now observes elapsed - penalty and converges."""
+    def mk_reg():
+        reg = Registry()
+        for name in ("ping", "pong"):
+            reg.register_module(ModuleDescriptor(
+                name=name, entrypoint="x:y",
+                impls=(ImplAlt("x1", 1, 50.0,
+                               meta={"true_chunk_ms": 5.0}),)))
+        return reg
+
+    jobs = [SimJob(200.0 * i, "t", "ping" if i % 2 == 0 else "pong", 1)
+            for i in range(8)]
+    reg = mk_reg()
+    fab = Fabric({"s": 1}, reg, PolicyConfig(refine_cost_model=True))
+    res = simulate(reg, fab, jobs)
+    assert res.reconfigurations == len(jobs)    # every chunk reconfigured
+    assert abs(fab.cost.est_chunk_ms("ping", 1) - 5.0) < 1.0, \
+        f"did not converge: {fab.cost.est_chunk_ms('ping', 1)}"
+
+    reg2 = mk_reg()
+    fab2 = Fabric({"s": 1}, reg2, PolicyConfig(refine_cost_model=False))
+    simulate(reg2, fab2, jobs)
+    assert fab2.cost.est_chunk_ms("ping", 1) == 50.0
+
+
+def test_daemon_refines_always_reconfiguring_module():
+    """Daemon analogue: alternating modules on one slot reconfigure on
+    every chunk, and both still feed the shared cost model."""
+    spec = uniform_shell("host1_s1", (1, 1), 1)
+    reg = default_registry()
+    d = Daemon(Shell(spec), reg, PolicyConfig(refine_cost_model=True))
+    try:
+        rng = np.random.default_rng(7)
+        re = rng.uniform(-2, 1, (128, 128)).astype(np.float32)
+        im = rng.uniform(-1.5, 1.5, (128, 128)).astype(np.float32)
+        img = rng.random((256, 256)).astype(np.float32)
+        for module, chunk in (("mandelbrot", (re, im)), ("sobel", (img,)),
+                              ("mandelbrot", (re, im))):
+            h = d.submit("t", module, [chunk])
+            assert len(h.future.result(timeout=300)) == 1
+        with d._lock:
+            assert d.stats["reconfigurations"] == 3
+            assert ("mandelbrot", 1) in d.fabric.cost._est
+            assert ("sobel", 1) in d.fabric.cost._est
+            # a real wall-time observation, not the clamp floor a bogus
+            # penalty subtraction would leave (t_run wraps the run only,
+            # so no reconfiguration cost is ever subtracted from it)
+            assert d.fabric.cost.est_chunk_ms("mandelbrot", 1) > 1e-2
+            assert d.fabric.cost.est_chunk_ms("sobel", 1) > 1e-2
     finally:
         d.shutdown()
 
