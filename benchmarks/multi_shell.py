@@ -24,10 +24,17 @@ fabric replays one no-affinity trace twice — `speed_aware=True` (ECT
 placement sees the true clocks) vs `speed_aware=False` (the scheduler
 plans as if both shells ran at the reference clock; true service times
 still apply).  Acceptance: speed-aware placement must win by >= 1.3x
-makespan.  A final row shows steal pricing on the same fabric: the
-speed-aware slow shell stops stealing chunks it cannot finish before
-the fast shell would anyway, and a prohibitive per-pair `transfer_ms`
-suppresses stealing entirely (enforced).
+makespan.  A steal-pricing row shows the speed-aware slow shell
+stopping steals it cannot finish before the fast shell would anyway,
+and a prohibitive per-pair `transfer_ms` suppressing stealing entirely
+(enforced).
+
+Checkpointed migration section: hi-prio arrivals evict mid-flight
+batch chunks; with `PolicyConfig.ckpt` the victims keep their progress
+(`SimResult.reclaimed_ms`) and an idle shell may *resume* a
+checkpointed chunk cross-shell when restore + transfer + remaining
+beats the victim draining it locally (enforced: checkpointing must not
+discard more slot-time than the lossy baseline).
 """
 from __future__ import annotations
 
@@ -111,7 +118,9 @@ def main(quick: bool = False) -> list[str]:
         rows.append(row(
             f"multi_shell/skew/{name}/makespan", r.makespan * 1e3,
             f"util={r.utilization:.3f} stolen={r.stolen_chunks} "
-            f"reconfigs={r.reconfigurations} {per_shell}{extra}"))
+            f"reconfigs={r.reconfigurations} "
+            f"discarded={r.discarded_ms:.0f}ms "
+            f"reclaimed={r.reclaimed_ms:.0f}ms {per_shell}{extra}"))
     speedup = res["static"].makespan / max(res["steal"].makespan, 1e-9)
     rows.append(row(
         "multi_shell/skew/steal_vs_static", 0.0,
@@ -202,6 +211,41 @@ def main(quick: bool = False) -> list[str]:
         print(f"FAIL: a prohibitive transfer cost did not suppress "
               f"stealing ({st_priced.stolen_chunks} chunks stolen)",
               file=sys.stderr)
+        sys.exit(1)
+
+    # -- checkpointed migration: hi-prio arrivals evict mid-flight batch
+    # chunks on s0; with PolicyConfig.ckpt the victims keep their
+    # progress and the idle s1 may *resume* one (restore + transfer +
+    # remaining gated against the victim draining locally) instead of
+    # the chunk re-running from zero.  Same trace with ckpt off is the
+    # lossy baseline.  The arrivals land ~20 ms into each 40 ms chunk,
+    # so every eviction has real progress at stake.
+    burst = [SimJob(0.0, "heavy", "batch", 6, affinity="s0"),
+             SimJob(0.0, "med", "batch", 3, affinity="s1")]
+    burst += [SimJob(25.0 + 45.0 * i, "live", "short", 1, priority=4,
+                     affinity="s0") for i in range(4)]
+    ck = {}
+    for name, on in (("off", False), ("on", True)):
+        r = simulate(reg, SHELLS, burst,
+                     PolicyConfig(preemptive=True, steal=True, ckpt=on,
+                                  transfer_ms=1.0))
+        ck[name] = r
+        rows.append(row(
+            f"multi_shell/ckpt_{name}/makespan", r.makespan * 1e3,
+            f"preemptions={r.preemptions} stolen={r.stolen_chunks} "
+            f"discarded={r.discarded_ms:.0f}ms "
+            f"reclaimed={r.reclaimed_ms:.0f}ms "
+            f"migrations={r.ckpt_migrations}"))
+    rows.append(row(
+        "multi_shell/ckpt_vs_lossy", 0.0,
+        f"discarded={ck['off'].discarded_ms:.0f}->"
+        f"{ck['on'].discarded_ms:.0f}ms "
+        f"makespan={ck['off'].makespan:.0f}->{ck['on'].makespan:.0f}ms "
+        f"migrations={ck['on'].ckpt_migrations}"))
+    if ck["on"].discarded_ms > ck["off"].discarded_ms:
+        print(f"FAIL: checkpointing discarded more slot-time than the "
+              f"lossy baseline ({ck['on'].discarded_ms:.0f} vs "
+              f"{ck['off'].discarded_ms:.0f} ms)", file=sys.stderr)
         sys.exit(1)
     return rows
 

@@ -13,6 +13,13 @@ locality-aware placement and cross-shell work stealing — alice pins her
 batch work to one shell with `affinity=`, and when the other shell goes
 idle it steals her queued chunks.
 
+Checkpointed preemption (`PolicyConfig.ckpt`): after the steady-state
+tenants are admitted, dave fires a high-priority interactive *burst*
+that evicts mid-flight batch chunks.  With checkpointing on, each
+victim's progress is saved (priced by the cost model) instead of
+discarded, and the chunk resumes at its remaining fraction — the
+`ckpt` stats line shows the saves/restores/migrations the burst caused.
+
     PYTHONPATH=src python examples/multi_tenant_serving.py
 
 Runs on the default 1-device view (single-shell fabric -> pure
@@ -55,10 +62,12 @@ def build_shells(reg):
 def main():
     reg = default_registry()
     shells = build_shells(reg)
-    # preemptive priority policy: carol's LM forward is latency-sensitive
-    # (priority 3 + deadline); alice/bob run as best-effort batch work whose
-    # chunks may be evicted, requeued — or stolen by an idle shell
-    daemon = Daemon(shells, reg, PolicyConfig(preemptive=True))
+    # preemptive priority policy with checkpointing: carol's LM forward
+    # is latency-sensitive (priority 3 + deadline); alice/bob run as
+    # best-effort batch work whose chunks may be evicted — keeping their
+    # progress — requeued, resumed, or stolen by an idle shell
+    daemon = Daemon(shells, reg,
+                    PolicyConfig(preemptive=True, ckpt=True))
     fab = reg.fabric("example")
     print(f"fabric: {fab.name} -> "
           f"{[(n, len(s.slots)) for n, s in shells.items()]}; "
@@ -82,6 +91,14 @@ def main():
                                           [(toks,)] * 2, priority=3,
                                           deadline_ms=5000.0),
     }
+    # dave's interactive burst lands while the batch tenants are
+    # mid-flight: high priority evicts resident chunks, whose progress
+    # the checkpoint subsystem saves and later resumes
+    time.sleep(0.2)
+    frame = rng.random((1024, 1024)).astype(np.float32)
+    for i in range(3):
+        handles[f"dave/burst{i}"] = daemon.submit(
+            "dave", "sobel", [(frame,)], priority=5, deadline_ms=2000.0)
     for name, h in handles.items():
         outs = h.future.result(timeout=600)
         dt = time.perf_counter() - t0
@@ -97,6 +114,11 @@ def main():
           f"local_dispatch={f['local_dispatch']} "
           f"scheduler={s['sched_ns'] / max(s['sched_calls'], 1) / 1e3:.0f}"
           f"us/event")
+    c = daemon.ckpt_stats
+    print(f"ckpt : saves={c.get('saves', 0)} "
+          f"restores={c.get('restores', 0)} "
+          f"migrations={c.get('migrations', 0)} "
+          f"dropped={c.get('dropped', 0)}")
     daemon.shutdown()
 
 

@@ -6,12 +6,14 @@
 - module.py     decoupled AOT compilation, relocation, weight loading
 - bus.py        layout adaptors (bus virtualisation analogue)
 - scheduler.py  resource-elastic space-time policy (replicate/replace/reuse)
+- checkpoint.py context save/restore for preempted chunks (priced, migratable)
 - fabric.py     one scheduling contract over many shells (locality + stealing)
 - simulator.py  discrete-event execution of the policy (tests + Fig 15)
 - daemon.py     live multi-tenant execution service (a Fabric executor)
 - zoo.py        module builders (mandelbrot/sobel/matmul/LM)
 """
 from repro.core.allocator import BuddyAllocator, Range
+from repro.core.checkpoint import CheckpointManager, ChunkCheckpoint
 from repro.core.daemon import Daemon, JobHandle
 from repro.core.fabric import Fabric, FabricJob
 from repro.core.registry import FabricDescriptor, ImplAlt, \
@@ -38,9 +40,15 @@ def default_registry() -> Registry:
     reg.register_module(ModuleDescriptor(
         name="matmul", entrypoint="repro.core.zoo:build_matmul",
         impls=(ImplAlt("x1", 1, 4.0), ImplAlt("x2", 2, 2.3)), kind="fn"))
+    # lm-forward carries large activation state: its context save/restore
+    # is priced above the policy default (ImplAlt.meta overrides)
     reg.register_module(ModuleDescriptor(
         name="lm-forward", entrypoint="repro.core.zoo:build_lm_forward",
-        impls=(ImplAlt("x1", 1, 20.0), ImplAlt("x2", 2, 11.0)), kind="fn"))
+        impls=(ImplAlt("x1", 1, 20.0,
+                       meta={"ckpt_save_ms": 2.0, "ckpt_restore_ms": 2.0}),
+               ImplAlt("x2", 2, 11.0,
+                       meta={"ckpt_save_ms": 2.0, "ckpt_restore_ms": 2.0})),
+        kind="fn"))
     # example multi-shell fabrics (Fabric.from_registry(reg, name))
     reg.register_fabric(FabricDescriptor("pod512", ("pod256_s4",
                                                     "pod256_s8")))

@@ -30,8 +30,8 @@ class BuddyAllocator:
     def free_slots(self) -> list[int]:
         return [i for i in range(self.n) if i not in self.busy]
 
-    def can_alloc(self, size: int) -> bool:
-        return self.find(size) is not None
+    def can_alloc(self, size: int, within: int | None = None) -> bool:
+        return self.find(size, within) is not None
 
     def largest_free(self) -> int:
         size = 1
@@ -47,12 +47,17 @@ class BuddyAllocator:
         positions); shared by find() and the scheduler's preemption scan."""
         return range(0, self.n - size + 1, size)
 
-    def find(self, size: int) -> Range | None:
-        """Smallest-index aligned free run of `size` slots."""
+    def find(self, size: int, within: int | None = None) -> Range | None:
+        """Smallest-index aligned free run of `size` slots, confined to
+        the first `within` slots (None = the whole shell; the scheduler
+        passes `n - reserve` to keep reserved slots out of reach)."""
         assert size >= 1 and (size & (size - 1)) == 0
         if size > self.n:
             return None
+        limit = self.n if within is None else within
         for start in self.aligned_starts(size):
+            if start + size > limit:
+                break
             if all(i not in self.busy for i in range(start, start + size)):
                 return Range(start, size)
         return None

@@ -21,6 +21,17 @@ discarded on completion (the FPGA analogue: reconfiguring a PR region
 kills the resident accelerator's partial work).  Either way the scheduler
 has already requeued the chunk, so it re-runs under a fresh assignment and
 the request's future still resolves with every chunk exactly once.
+
+Checkpointing (PolicyConfig.ckpt): the daemon mirrors the scheduling
+contract on its wall-clock path — evictions record wall-clock progress
+estimates, resumed assignments are priced at their remaining fraction
+plus restore, checkpointed chunks migrate across live shells with their
+records, and `daemon.ckpt_stats` surfaces the saves/restores/migrations
+counters.  The physical analogue stops at the model boundary: an
+in-process XLA computation cannot restore partial context, so a resumed
+chunk re-runs in full (a real FPGA backend would read back and restore
+the PR region state); the scheduler's decisions and accounting are
+checkpoint-aware either way.
 """
 from __future__ import annotations
 
@@ -99,6 +110,13 @@ class Daemon:
     @property
     def policy(self) -> PolicyConfig:
         return self.fabric.policy
+
+    @property
+    def ckpt_stats(self) -> dict:
+        """Checkpoint counters (saves/restores/migrations/dropped) when
+        `PolicyConfig.ckpt` is on; `{}` otherwise."""
+        return dict(self.fabric.ckpt.stats) \
+            if self.fabric.ckpt is not None else {}
 
     # -- public API (paper Listings 4/5) --------------------------------------
 
@@ -274,6 +292,9 @@ class Daemon:
                 # the simulator's elapsed time it never contains the
                 # reconfiguration cost (placement/compile happen before
                 # the clock starts) and nothing is subtracted here.
+                # Resumed chunks (a.frac < 1) re-run in full in-process,
+                # so t_run is already a full-chunk observation — no
+                # frac scaling either (unlike the simulator).
                 self.fabric.cost.observe(a.module, a.footprint,
                                          max(1e-3, t_run),
                                          self.fabric.speeds[shell_name])

@@ -22,6 +22,13 @@ fabric adds the cross-shell arbitration —
     chunk still runs exactly once;
   - a shared `CostModel` so online `est_chunk_ms` refinement on any
     shell improves placement everywhere;
+  - a shared `CheckpointManager` (`PolicyConfig.ckpt`,
+    core/checkpoint.py): evicted chunks keep their progress, and
+    **checkpointed migration** lets stealing move a checkpointed chunk
+    to another shell when restore + transfer + its remaining fraction
+    beats the victim draining its own backlog (the record is re-keyed
+    to the thief's sub-request; shells with `ShellSpec.ckpt = False`
+    neither save nor accept checkpoints);
   - **heterogeneity awareness**: each shell carries a relative `speed`
     (a chunk takes `est_chunk_ms / speed` there) and each (victim,
     thief) pair a cross-shell `transfer_ms` per stolen chunk
@@ -51,6 +58,7 @@ import itertools
 from collections import deque
 from typing import Any, Iterable, Mapping
 
+from repro.core.checkpoint import CheckpointManager
 from repro.core.registry import parse_transfer_pair
 from repro.core.scheduler import Assignment, CostModel, PolicyConfig, \
     SchedulerState
@@ -115,27 +123,45 @@ class Fabric:
         self.cost = cost or CostModel(registry, self.policy.refine_alpha)
         self._rid = itertools.count()        # fabric-wide id spaces
         self._aid = itertools.count()
+        # one checkpoint manager shared by every shell (like the cost
+        # model): records follow chunks across shells when stealing
+        # migrates them, and accounting is fabric-wide
+        self.ckpt = CheckpointManager(registry, self.policy) \
+            if self.policy.ckpt else None
         self.states: dict[str, SchedulerState] = {}
         self.speeds: dict[str, float] = {}   # true relative clocks
+        self.ckpt_capable: dict[str, bool] = {}
         for name, n in shells.items():
             if isinstance(n, int):
-                n_slots, speed = n, 1.0
+                n_slots, speed, capable = n, 1.0, True
             elif isinstance(n, tuple):
-                n_slots, speed = n
+                (n_slots, speed), capable = n, True
             else:
                 n_slots = n.n_slots
                 speed = getattr(n, "speed", 1.0)
+                # ShellSpec.ckpt = False models a shell without context
+                # readback: it evicts lossily, and checkpoints never
+                # migrate onto it
+                capable = getattr(n, "ckpt", True)
             if speed <= 0:
                 raise ValueError(f"shell {name!r} speed must be "
                                  f"positive, got {speed}")
             self.speeds[name] = speed
+            self.ckpt_capable[name] = capable
             # a speed-blind policy plans as if every shell ran at the
             # reference clock (true times still apply in the executor)
             st = SchedulerState(
                 n_slots, registry, self.policy, cost=self.cost,
-                speed=speed if self.policy.speed_aware else 1.0)
+                speed=speed if self.policy.speed_aware else 1.0,
+                ckpt=self.ckpt, ckpt_capable=capable, name=name)
             st._rid = self._rid
             st._aid = self._aid
+            # progress estimation must know a stolen chunk's transfer
+            # cost is overhead, not compute (mirrors the simulator's
+            # reclaim accounting)
+            st.transfer_of = (
+                lambda nm: lambda rid: self._sub_transfer.get(
+                    (nm, rid), 0.0))(name)
             self.states[name] = st
         self._transfer: dict[tuple[str, str], float] = {}
         for key, ms in (transfer or {}).items():
@@ -236,10 +262,19 @@ class Fabric:
         for q in st.queues.values():
             for r in q:
                 if r.pending > 0:
-                    total += r.pending * self.cost.est_chunk_ms(
+                    pend = float(r.pending)
+                    if self.ckpt is not None:
+                        # checkpointed victims only need their remaining
+                        # fraction — a shell full of mostly-done chunks
+                        # is a shorter queue than it looks
+                        pend = max(0.0, pend
+                                   - self.ckpt.pending_progress(r.rid))
+                    total += pend * self.cost.est_chunk_ms(
                         r.module, self._min_fp(r.module), st.speed)
         for a in st.active.values():
-            t = self.cost.est_chunk_ms(a.module, a.footprint, st.speed)
+            t = self.cost.est_chunk_ms(a.module, a.footprint,
+                                       st.speed) * a.frac \
+                + a.restore_ms + a.save_ms
             if a.reconfigure:
                 t += self.policy.reconfig_penalty_ms
             total += t
@@ -374,8 +409,8 @@ class Fabric:
         transfer = self._transfer_ms(victim, thief)
         priced = transfer > 0.0 or tst.speed != vst.speed
         # time for the victim to drain what it already has, per slot
-        drain_ms = self._backlog_ms(victim) / vst.alloc.n if priced \
-            else 0.0
+        drain_ms = self._backlog_ms(victim) / vst.alloc.n \
+            if priced or self.ckpt is not None else 0.0
         best, best_key = None, None
         for q in vst.queues.values():
             for r in q:
@@ -387,30 +422,65 @@ class Fabric:
                 min_fp = self._min_fp(r.module)
                 if min_fp > tst.alloc.largest_free():
                     continue              # thief can't host this module
+                reconf_ms = 0.0 if self._hosts(tst, r.module) \
+                    else self.policy.reconfig_penalty_ms
+                # tail steals take pristine chunks only — checkpointed
+                # ones sit at the front and move via the gated resume
+                # path below, never at an unpriced tail steal
+                pristine = r.pending
+                if self.ckpt is not None:
+                    pristine = 0
+                    for c in reversed(r._chunks):
+                        if self.ckpt.peek(r.rid, c) is not None:
+                            break
+                        pristine += 1
                 if priced:
-                    thief_ms = transfer + self.cost.est_chunk_ms(
-                        r.module, min_fp, tst.speed)
-                    if not self._hosts(tst, r.module):
-                        thief_ms += self.policy.reconfig_penalty_ms
-                    if thief_ms >= drain_ms:
-                        continue          # the steal loses: leave it
-                key = (-r.pending, r.rid)
-                if best_key is None or key < best_key:
-                    best, best_key = (r, entry, min_fp), key
+                    thief_ms = transfer + reconf_ms + \
+                        self.cost.est_chunk_ms(r.module, min_fp,
+                                               tst.speed)
+                    tail_ok = thief_ms < drain_ms
+                else:
+                    tail_ok = True        # unpriced: always-steal contract
+                if tail_ok and pristine > 0:
+                    key = (-r.pending, r.rid, 0)
+                    if best_key is None or key < best_key:
+                        best, best_key = (r, entry, min_fp, "tail"), key
+                # checkpointed migration: the request's *front* pending
+                # chunk is a preemption victim carrying a checkpoint;
+                # move it (always gated, even on a homogeneous pair)
+                # when restore + transfer + its remaining fraction beats
+                # the victim draining its own backlog
+                if self.ckpt is not None and self.ckpt_capable[thief] \
+                        and r._chunks:
+                    rec = self.ckpt.peek(r.rid, r._chunks[0])
+                    if rec is not None:
+                        move_ms = transfer + reconf_ms + \
+                            self.ckpt.restore_cost_ms(
+                                r.module, min_fp, tst.speed) + \
+                            rec.remaining * self.cost.est_chunk_ms(
+                                r.module, min_fp, tst.speed)
+                        if move_ms < drain_ms:
+                            key = (-r.pending, r.rid, 1)
+                            if best_key is None or key < best_key:
+                                best, best_key = \
+                                    (r, entry, min_fp, "resume"), key
         if best is None:
             return 0
-        req, (job, cmap), min_fp = best
+        req, (job, cmap), min_fp, mode = best
         # steal what the thief can place right now: the count of free
         # aligned windows at the module's smallest footprint (raw free
         # slots over-count under fragmentation); stealing re-evaluates
-        # on every event, so a deep backlog drains incrementally
-        k = min(req.pending, max(1, tst._n_free_ranges(min_fp)))
+        # on every event, so a deep backlog drains incrementally.  A
+        # resume-steal moves exactly the one checkpointed front chunk.
+        k = 1 if mode == "resume" else \
+            min(req.pending, max(1, tst._n_free_ranges(min_fp)))
         # the stolen sub-request inherits the victim's aging anchor
         # (time since submit or last service), so starvation-aging
         # credit earned queueing behind the busy shell survives the move
         anchor = req.t_submit if req.t_last_served is None else \
             max(req.t_submit, req.t_last_served)
-        taken = vst.steal_pending(req.rid, k)
+        taken = vst.steal_front(req.rid, k) if mode == "resume" \
+            else vst.steal_pending(req.rid, k)
         if not taken:
             return 0
         global_ids = [cmap[c] for c in taken]
@@ -426,6 +496,13 @@ class Fabric:
             job, {i: g for i, g in enumerate(global_ids)})
         if transfer > 0.0:
             self._sub_transfer[(thief, sub.rid)] = transfer
+        if self.ckpt is not None:
+            # a stolen chunk's checkpoint follows it to the thief (its
+            # context is part of the priced payload movement); a thief
+            # without restore support drops the record instead
+            for i, c in enumerate(taken):
+                self.ckpt.rekey((req.rid, c), (sub.rid, i), shell=thief,
+                                capable=self.ckpt_capable[thief])
         self.stats["steals"] += 1
         self.stats["stolen_chunks"] += len(taken)
         return len(taken)

@@ -18,7 +18,14 @@ from repro.core.shell import ShellSpec
 
 @dataclasses.dataclass(frozen=True)
 class ImplAlt:
-    """One implementation alternative (paper: bitstreams of varying size)."""
+    """One implementation alternative (paper: bitstreams of varying size).
+
+    Recognised `meta` keys: `true_chunk_ms` (simulator: actual service
+    time when the estimate is deliberately wrong), `ckpt_save_ms` /
+    `ckpt_restore_ms` (per-implementation context save/restore cost
+    overriding `PolicyConfig.ckpt_save_ms`/`ckpt_restore_ms` — a
+    state-heavy accelerator checkpoints slower than a stateless one).
+    """
     name: str
     footprint: int                 # slots occupied (power of two)
     est_chunk_ms: float = 0.0      # scheduler cost model; refined online

@@ -14,6 +14,13 @@ benchmark) and the live daemon executor:
   - PREEMPTION (THEMIS-style): a high-priority arrival may evict the
     lowest-priority resident chunk mid-flight; the victim chunk is
     requeued and the preemptor pays the modeled reconfiguration penalty.
+  - CHECKPOINTING (PolicyConfig.ckpt, core/checkpoint.py): an evicted
+    chunk's progress is snapshotted (priced context save, realized by
+    the preemptor) instead of discarded, and the chunk later resumes
+    with only its remaining fraction plus the priced restore cost.
+  - RESERVATION (PolicyConfig.reserve_slots): the last N slots are held
+    back from non-interactive requests so a predicted interactive burst
+    finds capacity without evicting anyone.
 
 Priority model: each request carries an integer `priority` (higher wins)
 and an optional relative `deadline_ms`.  The effective priority ages by
@@ -32,6 +39,7 @@ from collections import deque
 from typing import Any, Optional
 
 from repro.core.allocator import BuddyAllocator, Range
+from repro.core.checkpoint import CheckpointManager
 from repro.core.registry import ModuleDescriptor
 
 
@@ -103,6 +111,14 @@ class Assignment:
     # level it won the slot with (aging resets on service, so a starved
     # request's hard-earned promotion must not evaporate mid-chunk)
     eff: int = 0
+    # -- checkpoint/restore (core/checkpoint.py) -------------------------
+    t_start: float = 0.0                  # placement instant (progress base)
+    frac: float = 1.0                     # fraction of the chunk still to run
+    restore_ms: float = 0.0               # context-restore cost, paid up front
+    # context-save cost of the victims this assignment evicted, net of the
+    # overlap with its own reconfiguration (save readback and configuration
+    # use distinct ports, so only the excess delays the preemptor)
+    save_ms: float = 0.0
 
 
 @dataclasses.dataclass
@@ -139,6 +155,26 @@ class PolicyConfig:
     # False treats every shell as speed 1.0 for *decisions* (the
     # benchmark's speed-blind baseline — true service times still apply)
     speed_aware: bool = True
+    # -- checkpoint/restore (core/checkpoint.py) -------------------------
+    # snapshot an evicted chunk's progress instead of discarding it; the
+    # chunk later resumes with only its remaining fraction plus the
+    # modeled restore cost.  Off by default: the ckpt=False path is
+    # byte-identical to the pre-checkpoint contract (property-tested)
+    ckpt: bool = False
+    # modeled context save/restore costs; per-implementation overrides
+    # via ImplAlt.meta["ckpt_save_ms"/"ckpt_restore_ms"].  Both scale
+    # with shell speed like chunk times (context moves through the
+    # shell's own fabric, unlike the configuration port)
+    ckpt_save_ms: float = 1.0
+    ckpt_restore_ms: float = 1.0
+    # -- steal-aware admission reservation -------------------------------
+    # hold back the last N aligned slots of every shell from requests of
+    # base priority < reserve_priority, so a predicted interactive burst
+    # finds capacity without evicting anyone — the cheap alternative to
+    # checkpointed preemption.  A reservation that would leave a module
+    # unplaceable forever is waived for that request (no wedged jobs)
+    reserve_slots: int = 0
+    reserve_priority: int = 1
 
 
 class CostModel:
@@ -183,7 +219,9 @@ class CostModel:
 class SchedulerState:
     def __init__(self, n_slots: int, registry,
                  policy: PolicyConfig | None = None,
-                 cost: CostModel | None = None, speed: float = 1.0):
+                 cost: CostModel | None = None, speed: float = 1.0,
+                 ckpt: CheckpointManager | None = None,
+                 ckpt_capable: bool = True, name: str | None = None):
         self.alloc = BuddyAllocator(n_slots)
         self.registry = registry
         self.policy = policy or PolicyConfig()
@@ -191,6 +229,24 @@ class SchedulerState:
         # in est_chunk_ms / speed (1.0 = the homogeneous seed behavior)
         self.speed = speed
         self.cost = cost or CostModel(registry, self.policy.refine_alpha)
+        # checkpoint/restore: a Fabric shares one manager across shells
+        # (like the CostModel); a bare state builds its own when the
+        # policy asks for checkpointing.  ckpt_capable=False models a
+        # shell without context readback: it evicts lossily even when
+        # the policy checkpoints elsewhere.
+        self.name = name
+        self.ckpt_capable = ckpt_capable
+        if ckpt is not None:
+            self.ckpt = ckpt
+        elif self.policy.ckpt:
+            self.ckpt = CheckpointManager(registry, self.policy)
+        else:
+            self.ckpt = None
+        self._save_ms_pending = 0.0       # victims' save cost -> preemptor
+        # optional rid -> cross-shell transfer cost hook (a Fabric wires
+        # it to the stolen sub-request table): a stolen chunk's transfer
+        # is overhead, not compute, when estimating evicted progress
+        self.transfer_of = None
         self.queues: dict[str, deque[Request]] = {}
         # least-recently-served round robin: new tenants get priority
         self._served_at: dict[str, int] = {}
@@ -236,6 +292,8 @@ class SchedulerState:
         if req is None or req.finished:
             return
         req.failed = True
+        if self.ckpt is not None:
+            self.ckpt.drop_request(rid)   # dead chunks never resume
         self._pop_finished(req)
 
     def steal_pending(self, rid: int, k: int) -> list[int]:
@@ -246,13 +304,37 @@ class SchedulerState:
         (a Fabric) re-submits them elsewhere, so each chunk still runs
         exactly once.  A request drained to completion by the steal is
         popped from its tenant queue.
+
+        Checkpointed chunks are never taken from the tail: moving a
+        saved context is only worthwhile when restore + transfer +
+        remaining wins, which the fabric's gated resume-steal
+        (`steal_front`) prices explicitly.
         """
         req = self.requests[rid]
         if req.failed:
             return []
         take = []
         for _ in range(min(k, len(req._chunks))):
+            if self.ckpt is not None \
+                    and self.ckpt.peek(rid, req._chunks[-1]) is not None:
+                break
             take.append(req._chunks.pop())
+        req.n_chunks -= len(take)
+        self._pop_finished(req)
+        return take
+
+    def steal_front(self, rid: int, k: int) -> list[int]:
+        """`steal_pending` from the *front* of the pending queue — where
+        preemption victims are requeued.  A fabric uses this to migrate
+        a *checkpointed* chunk to another shell when resuming it there
+        (restore + transfer + remaining) beats the victim draining it
+        locally; the caller re-keys the checkpoint record."""
+        req = self.requests[rid]
+        if req.failed:
+            return []
+        take = []
+        for _ in range(min(k, len(req._chunks))):
+            take.append(req._chunks.popleft())
         req.n_chunks -= len(take)
         self._pop_finished(req)
         return take
@@ -344,12 +426,28 @@ class SchedulerState:
 
     # -- placement decision -----------------------------------------------------
 
-    def _n_free_ranges(self, size: int) -> int:
+    def _n_free_ranges(self, size: int, within: int | None = None) -> int:
+        within = self.alloc.n if within is None else within
         n = 0
         for start in self.alloc.aligned_starts(size):
-            if all(i not in self.alloc.busy
-                   for i in range(start, start + size)):
+            if start + size <= within and all(
+                    i not in self.alloc.busy
+                    for i in range(start, start + size)):
                 n += 1
+        return n
+
+    def _reserve_for(self, req: Request) -> int:
+        """Slots at the top of the shell held back from `req`
+        (`PolicyConfig.reserve_slots`): 0 for interactive requests (base
+        priority >= reserve_priority) and 0 when honoring the
+        reservation would make the module unplaceable forever."""
+        n = self.policy.reserve_slots
+        if n <= 0 or req.priority >= self.policy.reserve_priority:
+            return 0
+        n = min(n, self.alloc.n)
+        desc = self.registry.module(req.module)
+        if min(desc.footprints) > self.alloc.n - n:
+            return 0
         return n
 
     def _choose(self, req: Request,
@@ -364,7 +462,10 @@ class SchedulerState:
         pins everything to the smallest footprint with no replacement.
         """
         desc = self.registry.module(req.module)
-        fps = [f for f in desc.footprints if self.alloc.can_alloc(f)]
+        # admission reservation: the top reserve_slots stay out of reach
+        # of non-interactive requests (with an unplaceable-forever waiver)
+        within = self.alloc.n - self._reserve_for(req)
+        fps = [f for f in desc.footprints if self.alloc.can_alloc(f, within)]
         if not self.policy.elastic:
             fps = [f for f in fps if f == min(desc.footprints)]
         if not fps:
@@ -375,7 +476,8 @@ class SchedulerState:
 
         def free_reuse_range(fp: int) -> Range | None:
             for (start, size), (m, f) in self.resident.items():
-                if m == req.module and f == fp and size == fp:
+                if m == req.module and f == fp and size == fp \
+                        and start + size <= within:
                     r = Range(start, size)
                     if all(i not in self.alloc.busy for i in r.slots):
                         return r
@@ -385,13 +487,13 @@ class SchedulerState:
         for fp in fps:
             est = self.cost.est_chunk_ms(req.module, fp, self.speed)
             reuse = free_reuse_range(fp)
-            n_avail = self._n_free_ranges(fp)
+            n_avail = self._n_free_ranges(fp, within)
             conc = max(1, min(req.pending, n_avail))
             if reuse is not None:
                 t = est
                 cand = (conc / max(t, 1e-9), 1, fp, reuse, False)
             else:
-                r = self.alloc.find(fp)
+                r = self.alloc.find(fp, within)
                 if r is None:
                     continue
                 prev = self.resident.get((r.start, r.size))
@@ -441,8 +543,13 @@ class SchedulerState:
         for a in self.active.values():
             for i in a.rng.slots:
                 by_slot[i] = a
+        # a reservation shields the reserved window from non-interactive
+        # preemptors just as it does from their ordinary placements
+        within = self.alloc.n - self._reserve_for(req)
         best = None  # ((max victim eff, n victims, -newest aid), victims)
         for start in self.alloc.aligned_starts(need):
+            if start + need > within:
+                continue
             victims: dict[int, Assignment] = {}
             feasible = True
             for i in range(start, start + need):
@@ -462,16 +569,34 @@ class SchedulerState:
                 best = (cost, list(victims.values()))
         if best is None:
             return False
+        save_ms = 0.0
         for a in best[1]:
             del self.active[a.aid]
             self.alloc.free(a.rng)
             victim = self.requests[a.rid]
             victim.requeue_chunk(a.chunk)
+            if self.ckpt is not None and self.ckpt_capable \
+                    and not victim.failed:
+                # snapshot the victim's progress; distinct windows save
+                # through their own context ports concurrently, so the
+                # preemptor waits for the slowest save, not the sum.
+                # A freshly-stolen chunk (frac 1.0 — resumed reruns paid
+                # their transfer on the first attempt) spent its
+                # transfer cost moving, not computing
+                tr = self.transfer_of(a.rid) \
+                    if self.transfer_of is not None and a.frac == 1.0 \
+                    else 0.0
+                est_full = self.cost.est_chunk_ms(a.module, a.footprint,
+                                                  self.speed)
+                save_ms = max(save_ms, self.ckpt.save(
+                    a, now, est_full, speed=self.speed, shell=self.name,
+                    extra_overhead_ms=tr))
             # an aborted request whose last in-flight chunk just got
             # evicted drains here, not via complete()
             self._pop_finished(victim)
             self._preempted.append(a)
             self.n_preemptions += 1
+        self._save_ms_pending = save_ms
         return True
 
     def drain_preempted(self) -> list[Assignment]:
@@ -506,6 +631,7 @@ class SchedulerState:
                     and self._preempt_for(req, now, exclude=placed):
                 choice = self._choose(req, multi_tenant)
             if choice is None:
+                self._save_ms_pending = 0.0
                 break
             fp, rng, reconf = choice
             self.alloc.alloc_at(rng)
@@ -515,9 +641,29 @@ class SchedulerState:
                                 or rng.start + rng.size <= k[0])]:
                 del self.resident[key]
             self.resident[(rng.start, rng.size)] = (req.module, fp)
-            a = Assignment(req.rid, req.next_chunk(), req.module, fp,
+            chunk = req.next_chunk()
+            frac, restore_ms = 1.0, 0.0
+            if self.ckpt is not None:
+                rec = self.ckpt.take(req.rid, chunk)
+                if rec is not None:
+                    # resume from the checkpoint: run only the remaining
+                    # fraction, paying the priced restore cost up front
+                    frac = rec.remaining
+                    restore_ms = self.ckpt.restore_cost_ms(
+                        req.module, fp, self.speed)
+            save_ms = self._save_ms_pending
+            self._save_ms_pending = 0.0
+            if save_ms > 0.0 and reconf:
+                # the victims' context save overlaps the preemptor's own
+                # reconfiguration (readback and configuration ports are
+                # distinct); only the excess delays the preemptor
+                save_ms = max(0.0, save_ms
+                              - self.policy.reconfig_penalty_ms)
+            a = Assignment(req.rid, chunk, req.module, fp,
                            rng, reconf, aid=next(self._aid),
-                           eff=self.effective_priority(req, now))
+                           eff=self.effective_priority(req, now),
+                           t_start=now, frac=frac,
+                           restore_ms=restore_ms, save_ms=save_ms)
             self.active[a.aid] = a
             out.append(a)
             placed.add(a.aid)

@@ -43,6 +43,11 @@ class ShellSpec:
     a chunk estimated at `est_chunk_ms` on the reference takes
     `est_chunk_ms / speed` here.  It feeds the fabric's heterogeneity-
     aware placement and the simulator's true chunk times.
+
+    `ckpt` declares context-save/restore support (the PR-region
+    readback capability checkpointing needs, core/checkpoint.py):
+    a `ckpt=False` shell evicts lossily even when the fabric policy
+    checkpoints, and checkpointed chunks never migrate onto it.
     """
     name: str
     grid: tuple[int, int]          # device grid (rows, cols)
@@ -50,11 +55,12 @@ class ShellSpec:
     slots: tuple[SlotSpec, ...] = ()
     version: str = "1"
     speed: float = 1.0             # relative clock (1.0 = reference)
+    ckpt: bool = True              # context save/restore supported
 
     def to_json(self) -> dict:
         return {"name": self.name, "grid": list(self.grid),
                 "axes": list(self.axes), "version": self.version,
-                "speed": self.speed,
+                "speed": self.speed, "ckpt": self.ckpt,
                 "regions": [s.to_json() for s in self.slots]}
 
     @staticmethod
@@ -63,7 +69,8 @@ class ShellSpec:
             d["name"], tuple(d["grid"]), tuple(d.get("axes",
                                                      ("data", "model"))),
             tuple(SlotSpec.from_json(s) for s in d["regions"]),
-            d.get("version", "1"), d.get("speed", 1.0))
+            d.get("version", "1"), d.get("speed", 1.0),
+            d.get("ckpt", True))
 
     @property
     def n_slots(self) -> int:
@@ -90,7 +97,8 @@ class ShellSpec:
 
 
 def uniform_shell(name: str, grid: tuple[int, int], n_slots: int,
-                  axis: int = 1, speed: float = 1.0) -> ShellSpec:
+                  axis: int = 1, speed: float = 1.0,
+                  ckpt: bool = True) -> ShellSpec:
     """Split the grid into n homogeneous adjacent slots along `axis`."""
     assert grid[axis] % n_slots == 0
     slots = []
@@ -102,7 +110,8 @@ def uniform_shell(name: str, grid: tuple[int, int], n_slots: int,
             origin = (i * (grid[0] // n_slots), 0)
             shape = (grid[0] // n_slots, grid[1])
         slots.append(SlotSpec(f"slot{i}", origin, shape))
-    spec = ShellSpec(name, grid, slots=tuple(slots), speed=speed)
+    spec = ShellSpec(name, grid, slots=tuple(slots), speed=speed,
+                     ckpt=ckpt)
     spec.validate()
     return spec
 

@@ -16,11 +16,16 @@ seed timeline format `(t_start, t_end, (slot, size), rid)` is unchanged
 and per-shell views are recovered from `SimResult.per_shell`.
 
 Preemption semantics: when the policy evicts an in-flight chunk, the
-victim's occupancy is truncated at the eviction instant (the partial work
-is discarded — it still counts as slot occupancy, not as goodput), the
-chunk is requeued, and its original completion event becomes a stale no-op.
-Every submitted chunk therefore still completes exactly once, even when
-idle shells steal pending chunks across the fabric.
+victim's occupancy is truncated at the eviction instant (it still counts
+as slot occupancy, not as goodput), the chunk is requeued, and its
+original completion event becomes a stale no-op.  Every submitted chunk
+therefore still completes exactly once, even when idle shells steal
+pending chunks across the fabric.  Without checkpointing the truncated
+partial work is discarded (`SimResult.discarded_ms`); with
+`PolicyConfig.ckpt` the compute beyond the run's own overheads is
+preserved (`SimResult.reclaimed_ms`), the victims' context-save cost is
+realized at the preemptor's start, and the resumed chunk runs only its
+remaining fraction plus the restore cost (core/checkpoint.py).
 
 Cost model: the *actual* simulated chunk time comes from the registry
 (`ImplAlt.meta["true_chunk_ms"]` when present, else `est_chunk_ms`),
@@ -71,13 +76,23 @@ class SimResult:
     preemptions: int = 0
     # truncated spans of evicted chunks: (t_start, t_evict, slot_range, rid)
     preempted_spans: list = dataclasses.field(default_factory=list)
-    wasted_time: float = 0.0            # slot-time of discarded partial work
+    # slot-time of evicted runs (occupancy that produced no completed
+    # chunk); splits into discarded_ms + reclaimed_ms below
+    wasted_time: float = 0.0
     # rid -> {"tenant", "priority", "deadline_ms", "n_chunks"}
     request_meta: dict[int, dict] = dataclasses.field(default_factory=dict)
     n_slots: int = 1
     # shell name -> {"offset", "n_slots", "busy_ms", "utilization"}
     per_shell: dict[str, dict] = dataclasses.field(default_factory=dict)
     stolen_chunks: int = 0              # chunks moved by work stealing
+    # evicted slot-time lost for good vs preserved by checkpoints
+    # (invariant: discarded_ms + reclaimed_ms == wasted_time); with
+    # checkpointing off every evicted span is discarded
+    discarded_ms: float = 0.0
+    reclaimed_ms: float = 0.0
+    ckpt_saves: int = 0                 # context-save operations
+    ckpt_restores: int = 0              # chunks resumed from a checkpoint
+    ckpt_migrations: int = 0            # checkpoints moved across shells
 
     @property
     def mean_latency(self) -> float:
@@ -109,11 +124,19 @@ class SimResult:
 
     @property
     def useful_utilization(self) -> float:
-        """Utilization counting only work that was not later discarded."""
+        """Utilization counting only work that was not later discarded
+        (checkpoint-reclaimed partial work still counts as useful)."""
         if self.makespan <= 0 or self.utilization <= 0:
             return 0.0
-        return self.utilization - self.wasted_time / (
+        return self.utilization - self.discarded_ms / (
             self.makespan * max(1, self.n_slots))
+
+
+def _true_chunk_ms(registry: Registry, module: str, footprint: int,
+                   speed: float) -> float:
+    """Full-chunk true compute time on a shell (no penalties)."""
+    impl = registry.module(module).impl_for(footprint)
+    return impl.meta.get("true_chunk_ms", impl.est_chunk_ms) / speed
 
 
 def chunk_time_ms(registry: Registry, a: Assignment,
@@ -123,13 +146,16 @@ def chunk_time_ms(registry: Registry, a: Assignment,
 
     `speed` is the hosting shell's relative clock: compute scales by
     1/speed; the reconfiguration penalty does not (the configuration
-    port is modeled as generation-independent)."""
-    desc = registry.module(a.module)
-    impl = desc.impl_for(a.footprint)
-    t = impl.meta.get("true_chunk_ms", impl.est_chunk_ms) / speed
+    port is modeled as generation-independent).  A chunk resumed from a
+    checkpoint (`a.frac < 1`) runs only its remaining fraction and pays
+    its context-restore cost up front; `a.save_ms` realizes the evicted
+    victims' context save at the preemptor's start."""
+    t = _true_chunk_ms(registry, a.module, a.footprint, speed)
+    if a.frac != 1.0:
+        t *= a.frac
     if a.reconfigure:
         t += policy.reconfig_penalty_ms
-    return t
+    return t + a.restore_ms + a.save_ms
 
 
 def _as_fabric(registry: Registry, spec, policy: PolicyConfig) -> Fabric:
@@ -178,6 +204,8 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
     now = 0.0
     busy_time = 0.0
     wasted_time = 0.0
+    discarded_ms = 0.0
+    reclaimed_ms = 0.0
     reconfs = 0
     timeline = []
     preempted_spans = []
@@ -191,13 +219,32 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
 
     def dispatch(t0: float):
         nonlocal seq, busy_time, wasted_time, reconfs
+        nonlocal discarded_ms, reclaimed_ms
         new = fabric.schedule(now=t0)
         for shell, v in fabric.drain_preempted():
-            charged.pop(v.aid, None)
+            tr = charged.pop(v.aid, 0.0)
             ts = starts.pop(v.aid)
-            busy_time += (t0 - ts) * v.rng.size
-            busy_by_shell[shell] += (t0 - ts) * v.rng.size
-            wasted_time += (t0 - ts) * v.rng.size
+            span = (t0 - ts) * v.rng.size
+            busy_time += span
+            busy_by_shell[shell] += span
+            wasted_time += span
+            reclaimed = 0.0
+            if fabric.ckpt is not None and fabric.ckpt_capable[shell] \
+                    and not fabric.states[shell].requests[v.rid].failed:
+                # the run's compute beyond its overheads (restore, save,
+                # reconfiguration, transfer) survives in the checkpoint,
+                # capped at the work the run still had to do; overheads
+                # themselves are gone for good
+                over = v.restore_ms + v.save_ms + tr
+                if v.reconfigure:
+                    over += policy.reconfig_penalty_ms
+                remaining = v.frac * _true_chunk_ms(
+                    registry, v.module, v.footprint,
+                    fabric.speeds[shell])
+                reclaimed = min(max(0.0, (t0 - ts) - over),
+                                remaining) * v.rng.size
+            reclaimed_ms += reclaimed
+            discarded_ms += span - reclaimed
             job, _ = fabric.resolve(shell, v)
             preempted_spans.append(
                 (ts, t0, (offsets[shell] + v.rng.start, v.rng.size),
@@ -248,16 +295,23 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
                 # reconfigured chunks are observed too, minus the
                 # modeled penalty — a module that always reconfigures
                 # must still refine its estimate; likewise the transfer
-                # actually charged to this attempt is not the module's
-                # own time
-                extra = charged.get(a.aid, 0.0)
+                # actually charged to this attempt, and the checkpoint
+                # restore/save overheads, are not the module's own time.
+                # A resumed chunk ran only its remaining fraction, so
+                # its elapsed time is scaled back to a full chunk (a
+                # zero-length resume observes nothing).
+                extra = charged.get(a.aid, 0.0) + a.restore_ms \
+                    + a.save_ms
                 if a.reconfigure:
                     extra += policy.reconfig_penalty_ms
                 elapsed = now - ts
                 if extra > 0.0:
                     elapsed = max(1e-3, elapsed - extra)
-                fabric.cost.observe(a.module, a.footprint, elapsed,
-                                    fabric.speeds[shell])
+                if a.frac >= 1e-9:
+                    if a.frac != 1.0:
+                        elapsed = elapsed / a.frac
+                    fabric.cost.observe(a.module, a.footprint, elapsed,
+                                        fabric.speeds[shell])
             charged.pop(a.aid, None)
         dispatch(now)
 
@@ -266,6 +320,8 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
     for st in fabric.states.values():
         assert not st.alloc.busy, "simulator finished with busy slots"
         assert not st.active, "simulator finished with in-flight chunks"
+    assert fabric.ckpt is None or len(fabric.ckpt) == 0, \
+        "simulator finished with unconsumed checkpoint records"
     lat = {j.gid: j.t_finish - j.t_submit for j in fabric.jobs.values()}
     util = busy_time / (now * total_slots) if now > 0 else 0.0
     n_pre = sum(st.n_preemptions for st in fabric.states.values())
@@ -275,9 +331,15 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
                "utilization": (busy_by_shell[name] / (now * st.alloc.n)
                                if now > 0 else 0.0)}
         for name, st in fabric.states.items()}
+    cstats = fabric.ckpt.stats if fabric.ckpt is not None else {}
     return SimResult(now, util, reconfs, lat, timeline,
                      preemptions=n_pre,
                      preempted_spans=preempted_spans,
                      wasted_time=wasted_time, request_meta=meta,
                      n_slots=total_slots, per_shell=per_shell,
-                     stolen_chunks=fabric.stats["stolen_chunks"])
+                     stolen_chunks=fabric.stats["stolen_chunks"],
+                     discarded_ms=discarded_ms,
+                     reclaimed_ms=reclaimed_ms,
+                     ckpt_saves=cstats.get("saves", 0),
+                     ckpt_restores=cstats.get("restores", 0),
+                     ckpt_migrations=cstats.get("migrations", 0))

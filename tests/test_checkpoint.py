@@ -1,0 +1,549 @@
+"""Checkpoint/restore subsystem (core/checkpoint.py) + admission reservation.
+
+Contract under test:
+  - with `ckpt=False` (the default) the scheduler/simulator traces are
+    byte-identical to the pre-checkpoint (PR 3) contract — pinned both
+    by a property test over policy spellings and by golden values
+    captured from the PR 3 code on a deterministic trace;
+  - with `ckpt=True` an evicted chunk's progress survives: the resumed
+    run covers only the remaining fraction plus the priced restore
+    cost, the preemptor realizes the victims' save cost (net of its
+    reconfiguration overlap), and `SimResult.reclaimed_ms` /
+    `discarded_ms` split the evicted slot-time exactly;
+  - every chunk still completes exactly once under mixed preemption +
+    checkpointing + cross-shell migration at mixed speeds (property);
+  - checkpointed chunks migrate across shells only through the *gated*
+    resume-steal (restore + transfer + remaining must beat the victim
+    draining locally), never via an unpriced tail steal;
+  - shells with `ShellSpec.ckpt = False` neither save nor accept
+    checkpoints (and the flag survives the JSON roundtrip);
+  - `PolicyConfig.reserve_slots` holds back aligned slots for the
+    interactive class, with an unplaceable-forever waiver;
+  - the live daemon mirrors the contract on its wall-clock path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import random
+from collections import Counter
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import CheckpointManager, Daemon, Fabric, ImplAlt, \
+    ModuleDescriptor, PolicyConfig, Registry, Shell, SimJob, \
+    default_registry, simulate, uniform_shell
+from repro.core.registry import Registry as _Registry
+from repro.core.scheduler import Assignment, SchedulerState
+from repro.core.shell import ShellSpec
+
+
+def _registry() -> Registry:
+    reg = Registry()
+    reg.register_module(ModuleDescriptor(
+        name="batch", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 40.0), ImplAlt("x2", 2, 22.0))))
+    reg.register_module(ModuleDescriptor(
+        name="inter", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 4.0), ImplAlt("x2", 2, 2.4))))
+    return reg
+
+
+def _check_spans_consistent(res, n_slots: int) -> None:
+    """Capacity + no double-booking over completed AND evicted spans."""
+    spans = list(res.timeline) + list(res.preempted_spans)
+    events = []
+    for t0, t1, (s, size), _ in spans:
+        events += [(t0, size), (t1, -size)]
+    busy = 0
+    for _, d in sorted(events, key=lambda e: (e[0], e[1])):
+        busy += d
+        assert busy <= n_slots
+    per_slot: dict[int, list] = {}
+    for t0, t1, (s, size), _ in spans:
+        for i in range(s, s + size):
+            per_slot.setdefault(i, []).append((t0, t1))
+    for slot_spans in per_slot.values():
+        slot_spans.sort()
+        for (a0, a1), (b0, b1) in zip(slot_spans, slot_spans[1:]):
+            assert b0 >= a1 - 1e-9, "slot double-booked"
+
+
+# -- manager unit behavior ----------------------------------------------------
+
+def test_manager_costs_meta_overrides_and_speed_scaling():
+    reg = _registry()
+    reg.register_module(ModuleDescriptor(
+        name="heavy", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 30.0,
+                       meta={"ckpt_save_ms": 4.0,
+                             "ckpt_restore_ms": 6.0}),)))
+    mgr = CheckpointManager(reg, PolicyConfig(ckpt=True))
+    # policy defaults for a module without overrides
+    assert mgr.save_cost_ms("batch", 1) == 1.0
+    assert mgr.restore_cost_ms("batch", 1) == 1.0
+    # per-implementation overrides, speed-scaled like chunk times
+    assert mgr.save_cost_ms("heavy", 1) == 4.0
+    assert mgr.restore_cost_ms("heavy", 1) == 6.0
+    assert mgr.save_cost_ms("heavy", 1, speed=2.0) == 2.0
+    assert mgr.restore_cost_ms("heavy", 1, speed=0.5) == 12.0
+
+
+def test_manager_save_take_rekey_drop():
+    from repro.core.allocator import Range
+    reg = _registry()
+    mgr = CheckpointManager(reg, PolicyConfig(ckpt=True))
+    a = Assignment(7, 2, "batch", 1, Range(0, 1), True, aid=0,
+                   t_start=0.0)
+    # evicted at t=25 after a 5 ms reconfiguration: 20/40 of the work done
+    cost = mgr.save(a, 25.0, est_full_ms=40.0, shell="s0")
+    assert cost == 1.0 and len(mgr) == 1
+    rec = mgr.peek(7, 2)
+    assert rec.progress == 0.5 and rec.shell == "s0"
+    assert mgr.pending_progress(7) == 0.5
+    # a second eviction of the resumed run accumulates progress on top
+    a2 = Assignment(7, 2, "batch", 1, Range(0, 1), False, aid=1,
+                    t_start=30.0, frac=0.5, restore_ms=1.0)
+    mgr.take(7, 2)
+    assert mgr.save(a2, 41.0, est_full_ms=40.0, shell="s0") == 1.0
+    assert mgr.peek(7, 2).progress == 0.75          # 0.5 + 10/40
+    assert mgr.stats["saves"] == 2
+    # an eviction inside the overhead window re-records prior progress
+    # without paying a new save (the old context is still on file)
+    a3 = Assignment(7, 2, "batch", 1, Range(0, 1), True, aid=2,
+                    t_start=50.0, frac=0.25, restore_ms=1.0)
+    mgr.take(7, 2)
+    assert mgr.save(a3, 53.0, est_full_ms=40.0) == 0.0   # 3 < 5+1 overhead
+    assert mgr.peek(7, 2).progress == 0.75
+    assert mgr.stats["saves"] == 2
+    # migration re-keys; an incapable thief drops the record instead
+    assert mgr.rekey((7, 2), (9, 0), shell="s1")
+    assert mgr.peek(9, 0).shell == "s1" and mgr.peek(7, 2) is None
+    assert mgr.stats["migrations"] == 1
+    assert not mgr.rekey((9, 0), (11, 0), shell="s2", capable=False)
+    assert len(mgr) == 0 and mgr.stats["dropped"] == 1
+    # zero-progress evictions never create a record
+    a4 = Assignment(8, 0, "batch", 1, Range(0, 1), True, aid=3,
+                    t_start=0.0)
+    assert mgr.save(a4, 2.0, est_full_ms=40.0) == 0.0
+    assert len(mgr) == 0
+    # drop_request releases an aborted request's records
+    mgr.save(a, 25.0, est_full_ms=40.0)
+    mgr.drop_request(7)
+    assert len(mgr) == 0
+
+
+# -- off-path byte-identity (the PR 3 contract) -------------------------------
+
+offpath_jobs_strategy = st.lists(
+    st.tuples(st.floats(0, 200),
+              st.sampled_from(["u0", "u1", "hi"]),
+              st.sampled_from(["batch", "inter"]),
+              st.integers(1, 6),
+              st.integers(0, 3),
+              st.sampled_from([None, "a", "b"])),
+    min_size=1, max_size=15)
+
+
+@given(offpath_jobs_strategy,
+       st.sampled_from([(1, 1), (2, 1), (2, 2), (4, 2)]),
+       st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_ckpt_off_is_byte_identical(raw, sizes, preemptive):
+    """`ckpt=False` — spelled implicitly, or explicitly with zeroed
+    save/restore costs and zero reservation — reproduces the PR 3
+    scheduler/simulator trace byte-for-byte on every SimResult field."""
+    jobs = [SimJob(t, u, m, c, priority=p, affinity=aff)
+            for t, u, m, c, p, aff in raw]
+    shells = {"a": sizes[0], "b": sizes[1]}
+    base = simulate(_registry(), shells, jobs,
+                    PolicyConfig(preemptive=preemptive, steal=True))
+    explicit = simulate(_registry(), shells, jobs,
+                        PolicyConfig(preemptive=preemptive, steal=True,
+                                     ckpt=False, ckpt_save_ms=0.0,
+                                     ckpt_restore_ms=0.0,
+                                     reserve_slots=0))
+    assert dataclasses.asdict(base) == dataclasses.asdict(explicit)
+    # the new counters are inert on the off path
+    assert base.discarded_ms == base.wasted_time
+    assert base.reclaimed_ms == 0.0
+    assert base.ckpt_saves == base.ckpt_restores == 0
+    assert base.ckpt_migrations == 0
+
+
+def _golden_jobs() -> list[SimJob]:
+    rng = random.Random(42)
+    jobs = []
+    t = 0.0
+    for i in range(8):
+        jobs.append(SimJob(t, f"b{i % 2}", "batch", rng.randint(2, 5)))
+        t += rng.uniform(5.0, 30.0)
+    t = 3.0
+    for i in range(12):
+        jobs.append(SimJob(t, "hi", "inter", 1, priority=3,
+                           deadline_ms=25.0))
+        t += rng.uniform(6.0, 18.0)
+    return jobs
+
+
+@pytest.mark.parametrize("shells,golden", [
+    (4, (299.8586027605912, 65.20653662341455, 12, 29, 0,
+         "b045278dad64bc86")),
+    ({"a": 2, "b": 1}, (383.6578408109875, 80.6578408109875, 9, 20, 3,
+                        "f7027581c079e2e7")),
+    ({"a": (2, 1.0), "b": (2, 0.5)},
+     (390.0711882065109, 159.69746151299523, 12, 27, 4,
+      "fb3015baae669bb1")),
+])
+def test_ckpt_off_matches_pr3_goldens(shells, golden):
+    """Regression anchor: values captured by running the PR 3 code on
+    this exact trace — the off path must keep producing them."""
+    res = simulate(_registry(), shells, _golden_jobs(),
+                   PolicyConfig(preemptive=True, steal=True,
+                                transfer_ms=1.0 if isinstance(shells,
+                                                              dict)
+                                else 0.0))
+    h = hashlib.sha256(
+        repr((res.timeline, res.preempted_spans)).encode()) \
+        .hexdigest()[:16]
+    assert (res.makespan, res.wasted_time, res.preemptions,
+            res.reconfigurations, res.stolen_chunks, h) == golden
+
+
+# -- resume semantics ---------------------------------------------------------
+
+def test_resumed_chunk_runs_only_remaining_fraction():
+    """Single slot: a 40 ms chunk evicted 5 ms into its compute (10 ms
+    wall minus its 5 ms reconfiguration) resumes for the remaining
+    35 ms plus the 1 ms restore — 4 ms sooner than the lossy rerun;
+    the save (1 ms) hides under the preemptor's reconfiguration, so
+    the high-priority latency is identical."""
+    jobs = [SimJob(0.0, "lo", "batch", 1),
+            SimJob(10.0, "hi", "inter", 1, priority=5)]
+    off = simulate(_registry(), 1, jobs, PolicyConfig(preemptive=True))
+    on = simulate(_registry(), 1, jobs,
+                  PolicyConfig(preemptive=True, ckpt=True))
+    assert off.makespan == 64.0     # 10 evict + (5+4) hi + (5+40) rerun
+    assert on.makespan == 60.0      # 10 evict + (5+4) hi + (5+1+35)
+    hi_off = next(r for r, m in off.request_meta.items()
+                  if m["priority"] == 5)
+    hi_on = next(r for r, m in on.request_meta.items()
+                 if m["priority"] == 5)
+    assert on.request_latency[hi_on] == off.request_latency[hi_off]
+    assert on.ckpt_saves == 1 and on.ckpt_restores == 1
+    # the evicted 10 ms span splits: 5 ms compute reclaimed, the 5 ms
+    # reconfiguration overhead discarded
+    assert on.wasted_time == 10.0
+    assert on.reclaimed_ms == 5.0 and on.discarded_ms == 5.0
+    assert off.discarded_ms == 10.0 and off.reclaimed_ms == 0.0
+
+
+def test_save_cost_beyond_reconfig_overlap_delays_preemptor():
+    """A context save longer than the reconfiguration penalty delays
+    the preemptor by exactly the excess."""
+    jobs = [SimJob(0.0, "lo", "batch", 1),
+            SimJob(10.0, "hi", "inter", 1, priority=5)]
+    on = simulate(_registry(), 1, jobs,
+                  PolicyConfig(preemptive=True, ckpt=True,
+                               ckpt_save_ms=8.0))
+    hi = next(r for r, m in on.request_meta.items()
+              if m["priority"] == 5)
+    # hi pays reconfig 5 + excess save (8 - 5) + 4 ms compute
+    assert on.request_latency[hi] == 12.0
+
+
+def test_zero_progress_eviction_saves_nothing():
+    """A chunk evicted inside its own reconfiguration window has no
+    progress: no record, no save cost, no restore on the rerun."""
+    jobs = [SimJob(0.0, "lo", "batch", 1),
+            SimJob(3.0, "hi", "inter", 1, priority=5)]
+    off = simulate(_registry(), 1, jobs, PolicyConfig(preemptive=True))
+    on = simulate(_registry(), 1, jobs,
+                  PolicyConfig(preemptive=True, ckpt=True))
+    assert on.makespan == off.makespan == 57.0
+    assert on.ckpt_saves == 0 and on.ckpt_restores == 0
+    assert on.reclaimed_ms == 0.0
+
+
+def test_refinement_unbiased_by_resumed_fractions():
+    """A resumed chunk's observation is scaled back to a full chunk:
+    with est == true the estimate must stay exact through a
+    preempt/resume cycle."""
+    reg = _registry()
+    fab = Fabric({"s": 1}, reg,
+                 PolicyConfig(preemptive=True, ckpt=True,
+                              refine_cost_model=True))
+    res = simulate(reg, fab, [SimJob(0.0, "lo", "batch", 1),
+                              SimJob(10.0, "hi", "inter", 1, priority=5)])
+    assert res.ckpt_restores == 1
+    assert fab.cost.est_chunk_ms("batch", 1) == 40.0
+    assert fab.cost.est_chunk_ms("inter", 1) == 4.0
+
+
+# -- exactly-once under mixed preemption + migration (property) ---------------
+
+mixed_jobs_strategy = st.lists(
+    st.tuples(st.floats(0, 200),
+              st.sampled_from(["u0", "u1", "hi"]),
+              st.sampled_from(["batch", "inter"]),
+              st.integers(1, 6),
+              st.integers(0, 3),
+              st.sampled_from([None, "a", "b"])),
+    min_size=1, max_size=15)
+
+
+@given(mixed_jobs_strategy,
+       st.sampled_from([(1, 1), (2, 1), (2, 2), (4, 2)]),
+       st.sampled_from([(1.0, 1.0), (0.5, 2.0), (1.0, 0.25)]),
+       st.sampled_from([0.0, 1.0]))
+@settings(max_examples=60, deadline=None)
+def test_exactly_once_under_ckpt_and_migration(raw, sizes, speeds,
+                                               transfer):
+    """Preemption + checkpointing + stealing + affinity over shells of
+    mixed speeds: every chunk completes exactly once, capacity holds
+    over completed and evicted spans, the discarded/reclaimed split is
+    exact, and no checkpoint record leaks."""
+    jobs = [SimJob(t, u, m, c, priority=p, affinity=aff)
+            for t, u, m, c, p, aff in raw]
+    fab = Fabric({"a": (sizes[0], speeds[0]), "b": (sizes[1], speeds[1])},
+                 _registry(),
+                 PolicyConfig(preemptive=True, steal=True, ckpt=True,
+                              transfer_ms=transfer))
+    res = simulate(_registry(), fab, jobs)
+    done = Counter(rid for *_, rid in res.timeline)
+    for rid, meta in res.request_meta.items():
+        assert done[rid] == meta["n_chunks"], \
+            f"rid {rid}: {done[rid]} completions != {meta['n_chunks']}"
+    assert res.preemptions == len(res.preempted_spans)
+    _check_spans_consistent(res, sum(sizes))
+    assert abs(res.discarded_ms + res.reclaimed_ms
+               - res.wasted_time) < 1e-6
+    assert res.reclaimed_ms >= 0.0 and res.discarded_ms >= -1e-9
+    assert len(fab.ckpt) == 0, "leaked checkpoint records"
+
+
+# -- checkpointed migration ---------------------------------------------------
+
+def test_checkpointed_chunk_migrates_when_move_wins():
+    """An idle shell resumes another shell's checkpointed victim when
+    restore + transfer + remaining beats the victim draining locally —
+    and the resumed run on the thief is priced exactly."""
+    jobs = [SimJob(0.0, "lo", "batch", 1, affinity="v"),
+            SimJob(10.0, "hi", "inter", 1, priority=5, affinity="v")]
+    fab = Fabric({"v": 1, "t": 1}, _registry(),
+                 PolicyConfig(preemptive=True, ckpt=True, steal=True))
+    res = simulate(_registry(), fab, jobs)
+    # evicted at 10 with 5 ms of compute done (0.125 of 40): the thief
+    # pays reconfig 5 + restore 1 + remaining 35 from t=10 -> 51
+    assert res.ckpt_migrations == 1 and res.stolen_chunks == 1
+    assert res.makespan == 51.0
+    assert res.per_shell["t"]["busy_ms"] == 41.0
+
+
+def test_checkpointed_migration_skipped_when_move_loses():
+    """A prohibitive transfer cost keeps the checkpointed chunk home —
+    it resumes on its origin shell after the preemptor; an unpriced
+    tail steal must never move it."""
+    jobs = [SimJob(0.0, "lo", "batch", 1, affinity="v"),
+            SimJob(10.0, "hi", "inter", 1, priority=5, affinity="v")]
+    fab = Fabric({"v": 1, "t": 1}, _registry(),
+                 PolicyConfig(preemptive=True, ckpt=True, steal=True,
+                              transfer_ms=1000.0))
+    res = simulate(_registry(), fab, jobs)
+    assert res.ckpt_migrations == 0 and res.stolen_chunks == 0
+    assert res.makespan == 60.0         # local resume: 19 + 5 + 1 + 35
+    assert res.per_shell["t"]["busy_ms"] == 0.0
+
+
+def test_pristine_tail_still_steals_around_checkpointed_front():
+    """Tail stealing keeps working with checkpointing on: pristine
+    chunks move ungated while the checkpointed front chunk stays gated."""
+    jobs = [SimJob(0.0, "lo", "batch", 4, affinity="v"),
+            SimJob(10.0, "hi", "inter", 1, priority=5, affinity="v")]
+    fab = Fabric({"v": 1, "t": 1}, _registry(),
+                 PolicyConfig(preemptive=True, ckpt=True, steal=True))
+    res = simulate(_registry(), fab, jobs)
+    done = Counter(rid for *_, rid in res.timeline)
+    for rid, meta in res.request_meta.items():
+        assert done[rid] == meta["n_chunks"]
+    assert res.stolen_chunks > 0
+    assert len(fab.ckpt) == 0
+
+
+def test_stolen_chunk_evicted_mid_transfer_records_no_phantom_progress():
+    """Regression: a freshly-stolen chunk's transfer time is overhead,
+    not compute.  Evicted before the transfer+reconfig window ends, it
+    has zero progress — no record, no save, and the rerun covers the
+    full chunk (the checkpoint must not silently swallow the 10 ms the
+    chunk never actually computed)."""
+    jobs = [SimJob(0.0, "lo", "batch", 2, affinity="v"),
+            SimJob(12.0, "hi", "inter", 1, priority=5, affinity="t")]
+    fab = Fabric({"v": 1, "t": 1}, _registry(),
+                 PolicyConfig(preemptive=True, ckpt=True, steal=True,
+                              transfer_ms=10.0))
+    res = simulate(_registry(), fab, jobs)
+    # chunk1 stolen onto t at t=0 (transfer 10 + reconfig 5), evicted
+    # at t=12 inside that overhead window: no checkpoint
+    assert res.stolen_chunks == 1
+    assert res.ckpt_saves == 0 and res.ckpt_restores == 0
+    assert res.reclaimed_ms == 0.0 and res.discarded_ms == 12.0
+    # full rerun after hi (done 21): reconfig 5 + 40, transfer not
+    # re-paid -> 66; a phantom checkpoint would finish at 60 having
+    # run 7 ms short
+    assert res.makespan == 66.0
+
+
+# -- per-shell capability -----------------------------------------------------
+
+def test_ckpt_incapable_shell_evicts_lossily():
+    """A `ShellSpec.ckpt = False` shell discards evicted work even when
+    the policy checkpoints — identical to the off-path trace."""
+    spec = uniform_shell("noc", (1, 1), 1, ckpt=False)
+    jobs = [SimJob(0.0, "lo", "batch", 1),
+            SimJob(10.0, "hi", "inter", 1, priority=5)]
+    on = simulate(_registry(), {"noc": spec}, jobs,
+                  PolicyConfig(preemptive=True, ckpt=True))
+    assert on.makespan == 64.0          # the lossy rerun, not 60.0
+    assert on.ckpt_saves == 0 and on.reclaimed_ms == 0.0
+    assert on.discarded_ms == on.wasted_time == 10.0
+
+
+def test_shellspec_ckpt_flag_json_roundtrip(tmp_path):
+    reg = default_registry()
+    reg.register_shell(uniform_shell("noc", (1, 2), 2, ckpt=False))
+    reg.save(tmp_path)
+    reg2 = _Registry.load(tmp_path)
+    assert reg2.shell("noc").ckpt is False
+    assert reg2.shell("host8_s4").ckpt is True
+    # pre-checkpoint saves (no "ckpt" key) default to capable
+    assert ShellSpec.from_json(
+        {"name": "old", "grid": [1, 1], "regions": []}).ckpt is True
+
+
+# -- admission reservation (steal-aware admission) ----------------------------
+
+def test_reserve_slots_holds_capacity_for_interactive_class():
+    """With the last slot reserved, batch replication stops at 3 of 4
+    slots and a cooperative (non-preemptive) policy still serves the
+    interactive arrival immediately; without the reservation it waits
+    out a full batch chunk."""
+    jobs = [SimJob(0.0, "b", "batch", 4),
+            SimJob(5.0, "live", "inter", 1, priority=3)]
+    plain = simulate(_registry(), 4, jobs, PolicyConfig(preemptive=False))
+    res = simulate(_registry(), 4, jobs,
+                   PolicyConfig(preemptive=False, reserve_slots=1))
+    hi = next(r for r, m in res.request_meta.items()
+              if m["priority"] == 3)
+    assert res.request_latency[hi] == 9.0       # reconfig 5 + 4, no wait
+    assert plain.request_latency[hi] > 30.0     # behind a 40 ms chunk
+    # batch placements never touch the reserved slot
+    for t0, t1, (s, size), rid in res.timeline:
+        if res.request_meta[rid]["priority"] == 0:
+            assert s + size <= 3, "batch placed into the reserved slot"
+    assert res.preemptions == 0
+
+
+def test_reserve_waived_when_module_would_be_unplaceable():
+    """A reservation that would leave a module with no feasible window
+    is waived for that request instead of wedging it forever."""
+    reg = _registry()
+    reg.register_module(ModuleDescriptor(
+        name="wide", entrypoint="x:y",
+        impls=(ImplAlt("x2", 2, 10.0),)))
+    res = simulate(reg, 2, [SimJob(0.0, "b", "wide", 1)],
+                   PolicyConfig(reserve_slots=1))
+    assert res.makespan == 15.0                 # placed despite reserve
+    res2 = simulate(reg, 4, [SimJob(0.0, "b", "wide", 1)],
+                    PolicyConfig(reserve_slots=1))
+    (t0, t1, (s, size), _), = res2.timeline
+    assert s + size <= 3                        # feasible -> honored
+
+
+def test_reserve_shields_reserved_window_from_low_priority_preemptor():
+    """An aged low-priority request must not preempt into the reserved
+    window: the reservation holds against placement AND eviction."""
+    state = SchedulerState(2, _registry(),
+                           PolicyConfig(preemptive=True, reserve_slots=1,
+                                        starvation_bound_ms=1e9))
+    hi = state.submit("live", "inter", 2, now=0.0, priority=3)
+    issued = state.schedule(now=0.0)
+    assert len(issued) == 2                     # both slots, incl. reserve
+    lo = state.submit("b", "batch", 1, now=1.0, priority=0)
+    state.schedule(now=1.0)
+    assert not state.drain_preempted()
+    assert lo.pending == 1                      # waits; nothing evicted
+
+
+# -- live daemon --------------------------------------------------------------
+
+def test_daemon_scheduler_core_checkpoints_on_wall_clock():
+    """Drive the daemon's scheduler state deterministically: an evicted
+    chunk records wall-clock progress and resumes at its remaining
+    fraction with the restore cost priced in."""
+    spec = uniform_shell("host1_s1", (1, 1), 1)
+    reg = default_registry()
+    d = Daemon(Shell(spec), reg,
+               PolicyConfig(preemptive=True, ckpt=True))
+    try:
+        with d._lock:
+            st = d.state
+            req = st.submit("lo", "mandelbrot", 1,
+                            payloads=[object()], now=0.0)
+            (a0,) = st.schedule(now=0.0)
+            assert a0.frac == 1.0 and a0.reconfigure
+            # eviction at t=9: 4 ms of compute behind the 5 ms reconfig
+            st.submit("hi", "sobel", 1, payloads=[object()], now=9.0,
+                      priority=5)
+            placed = st.schedule(now=9.0)
+            (victim,) = st.drain_preempted()
+            assert victim.aid == a0.aid
+            rec = d.fabric.ckpt.peek(req.rid, victim.chunk)
+            assert rec is not None
+            assert rec.progress == pytest.approx(4.0 / 12.0)
+            assert d.ckpt_stats["saves"] == 1
+            # the preemptor's save cost hid under its reconfiguration
+            assert all(a.save_ms == 0.0 for a in placed)
+            # complete the preemptor; the victim resumes at remainder
+            (hi_a,) = placed
+            assert st.complete(hi_a, now=15.0)
+            (resumed,) = st.schedule(now=15.0)
+            assert resumed.rid == req.rid
+            assert resumed.frac == pytest.approx(1.0 - 4.0 / 12.0)
+            assert resumed.restore_ms == 1.0
+            assert d.ckpt_stats["restores"] == 1
+            assert len(d.fabric.ckpt) == 0
+            assert st.complete(resumed, now=25.0)
+    finally:
+        d.shutdown()
+
+
+def test_daemon_consistent_under_preemptive_ckpt_policy():
+    """Live end-to-end: a preemptive+ckpt policy keeps futures, results
+    and allocator consistent — every chunk resolves exactly once even
+    when resumed chunks re-run in full in-process."""
+    spec = uniform_shell("host1_s1", (1, 1), 1)
+    reg = default_registry()
+    d = Daemon(Shell(spec), reg,
+               PolicyConfig(preemptive=True, ckpt=True,
+                            reconfig_penalty_ms=0.1))
+    try:
+        rng = np.random.default_rng(0)
+        re = rng.uniform(-2, 1, (256, 256)).astype(np.float32)
+        im = rng.uniform(-1.5, 1.5, (256, 256)).astype(np.float32)
+        img = rng.random((1024, 1024)).astype(np.float32)
+        lo = d.submit("lo", "mandelbrot", [(re, im)] * 3, priority=0)
+        hi = d.submit("hi", "sobel", [(img,)], priority=5,
+                      deadline_ms=50.0)
+        assert len(lo.future.result(timeout=300)) == 3
+        assert len(hi.future.result(timeout=300)) == 1
+        with d._lock:
+            assert not d._results and not d._handles
+            assert not d.state.alloc.busy and not d.state.active
+            assert isinstance(d.ckpt_stats, dict)
+            assert len(d.fabric.ckpt) == 0
+        assert d.stats["chunks"] == 4
+    finally:
+        d.shutdown()
