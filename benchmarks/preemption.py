@@ -32,6 +32,28 @@ the price of the held-back slot's idle capacity.
 `--ckpt` enforces the acceptance gate (CI): at the finest interactive
 rate, checkpointing must reclaim >= 50% of the slot-time the plain
 preemptive policy discards, at equal-or-better high-priority p95.
+
+**Predictive reservation** (`reserve_mode="adaptive"`, core/arrivals.py)
+gets its own section on a *drifting*-rate trace: the interactive
+inter-arrival drifts 10 ms -> 80 ms -> 10 ms within one run, so any
+static `reserve_slots` setting is wrong on at least one phase — too
+small when the burst is hot (interactive queues behind batch chunks),
+too large when it cools (reserved capacity idles and batch throughput
+collapses).  The adaptive policy sizes the reservation online from the
+observed arrival rate and is compared per phase against every static
+setting; the first `SETTLE_MS` of each phase are excluded from the
+per-phase p95 for *all* policies alike (reservation drain + estimator
+adaptation are inside that window by design).
+
+`--adaptive` enforces the acceptance gate (CI): on every phase the
+adaptive p95 must stay within `ADAPT_ENVELOPE`x of the per-phase-best
+static (plus one reconfiguration penalty of absolute slack — at
+single-digit-millisecond latencies one reconfig is measurement
+granularity), while every static setting must lose somewhere — either
+break that envelope on some phase (and then adaptive must beat it >=
+`ADAPT_ENVELOPE`x on its worst phase) or fall short of the adaptive
+policy's goodput; any static that matches the latency envelope
+everywhere must trail adaptive goodput by at least `GOODPUT_MARGIN`.
 """
 from __future__ import annotations
 
@@ -41,6 +63,7 @@ import sys
 from benchmarks.common import row
 from repro.core import ImplAlt, ModuleDescriptor, PolicyConfig, Registry, \
     SimJob, simulate
+from repro.core.simulator import p95
 
 SLOTS = 4
 PRIORITY_HI = 3
@@ -53,6 +76,19 @@ STARVATION_BOUND_MS = 300.0
 # CI gate: well below the expected ~80-90% reclaim at ia=10 (same style
 # as the 1.3x hetero bound)
 RECLAIM_GATE = 0.5
+
+# -- drifting-rate trace (predictive reservation) ------------------------
+# interactive inter-arrival per phase: hot burst -> cool-down -> hot
+# burst again, so no static reserve_slots value fits the whole trace
+DRIFT_PHASES = ((10.0, 1300.0), (80.0, 2600.0), (10.0, 1300.0))
+STATIC_RESERVES = (0, 1, 2)
+RESERVE_MAX = 2
+# per-phase warm-up excluded from the p95 of *every* policy: covers the
+# estimator's adaptation plus the drain of a resident batch chunk out
+# of a newly reserved slot
+SETTLE_MS = 250.0
+ADAPT_ENVELOPE = 1.2
+GOODPUT_MARGIN = 0.05
 
 
 def _registry() -> Registry:
@@ -91,6 +127,144 @@ def jain(xs: list[float]) -> float:
     return (sum(xs) ** 2) / (len(xs) * sum(x * x for x in xs))
 
 
+def drifting_trace(rng: random.Random,
+                   phases=DRIFT_PHASES) -> tuple[list[SimJob], list]:
+    """Batch background over the whole horizon + interactive arrivals
+    whose inter-arrival drifts per phase; returns (jobs, phase bounds)."""
+    horizon = sum(length for _, length in phases)
+    jobs = []
+    for tenant in ("batch0", "batch1"):
+        t = 0.0
+        while t < horizon:
+            jobs.append(SimJob(t, tenant, "batch", rng.randint(3, 6)))
+            t += rng.uniform(80.0, 220.0)
+    t0, bounds = 0.0, []
+    for ia, length in phases:
+        t = t0 + rng.uniform(0.0, ia)
+        while t < t0 + length:
+            jobs.append(SimJob(t, "live", "inter", 1,
+                               priority=PRIORITY_HI,
+                               deadline_ms=DEADLINE_MS))
+            t += rng.expovariate(1.0 / ia)
+        bounds.append((t0, t0 + length))
+        t0 += length
+    return jobs, bounds
+
+
+def _phase_p95s(res, bounds, settle: float = SETTLE_MS) -> list[float]:
+    """Hi-prio p95 per phase, excluding each phase's settle window."""
+    out = []
+    for a, b in bounds:
+        out.append(p95([
+            lat for rid, lat in res.request_latency.items()
+            if res.request_meta[rid]["priority"] == PRIORITY_HI
+            and a + settle <= res.request_meta[rid]["t_submit"] < b]))
+    return out
+
+
+def _mean_reserve(res, bounds) -> list[float]:
+    """Time-weighted mean effective reservation per phase (shell0)."""
+    hist = list(res.reserve_history.get("shell0", []))
+    out = []
+    for a, b in bounds:
+        level, t_prev, acc = 0, a, 0.0
+        for t, n in hist:
+            if t >= b:
+                break
+            if t <= a:
+                level = n
+                continue
+            acc += level * (t - t_prev)
+            level, t_prev = n, t
+        acc += level * (b - t_prev)
+        out.append(acc / (b - a))
+    return out
+
+
+def adaptive_section(gate: bool = False) -> list[str]:
+    """Predictive-reservation rows on the drifting-rate trace; with
+    `gate`, enforce the acceptance bounds (exits non-zero on failure).
+    Runs at full size even under --quick: one simulation is ~0.1 s and
+    the per-phase p95s need their sample counts."""
+    reg = _registry()
+    jobs, bounds = drifting_trace(random.Random(2))
+    kw = {"starvation_bound_ms": STARVATION_BOUND_MS,
+          "preemptive": False}
+    policies = [(f"static{n}", PolicyConfig(reserve_slots=n, **kw))
+                for n in STATIC_RESERVES]
+    policies.append(("adaptive", PolicyConfig(
+        reserve_mode="adaptive", reserve_slots_max=RESERVE_MAX, **kw)))
+    rows, res, phases = [], {}, {}
+    for name, pol in policies:
+        r = simulate(reg, SLOTS, jobs, pol)
+        res[name] = r
+        phases[name] = _phase_p95s(r, bounds)
+        extra = ""
+        if name == "adaptive":
+            mean = _mean_reserve(r, bounds)
+            extra = (" mean_reserve=" +
+                     "/".join(f"{m:.2f}" for m in mean) +
+                     f" resizes={len(r.reserve_history['shell0'])}")
+        rows.append(row(
+            f"themis/drift/{name}/hi_p95_phases", 0.0,
+            "p95_ms=" + "/".join(f"{p * 1.0:.1f}" for p in phases[name])
+            + f" goodput={r.useful_utilization:.3f} "
+            f"miss_rate={r.deadline_miss_rate:.3f} "
+            f"makespan={r.makespan:.0f}ms" + extra))
+    # per-phase envelope: adaptive must track the best static on every
+    # phase; one reconfiguration penalty of absolute slack on top of
+    # the multiplicative bound (see module docstring)
+    pen = policies[0][1].reconfig_penalty_ms
+    best = [min(phases[f"static{n}"][i] for n in STATIC_RESERVES)
+            for i in range(len(bounds))]
+    allowed = [max(ADAPT_ENVELOPE * b, b + pen) for b in best]
+    adapt = phases["adaptive"]
+    g_adapt = res["adaptive"].useful_utilization
+
+    def loses(name: str) -> str | None:
+        """How a static setting loses to adaptive (None = it doesn't)."""
+        bad = [i for i in range(len(bounds))
+               if phases[name][i] > allowed[i] + 1e-9]
+        if bad:
+            worst = max(bad, key=lambda i: phases[name][i] / max(
+                adapt[i], 1e-9))
+            ratio = phases[name][worst] / max(adapt[worst], 1e-9)
+            if gate and ratio < ADAPT_ENVELOPE:
+                print(f"FAIL: adaptive only {ratio:.2f}x better than "
+                      f"{name} on its mismatched phase {worst} "
+                      f"(acceptance: >={ADAPT_ENVELOPE}x)",
+                      file=sys.stderr)
+                sys.exit(1)
+            return (f"p95 phase{worst} "
+                    f"{phases[name][worst]:.1f}ms vs adaptive "
+                    f"{adapt[worst]:.1f}ms ({ratio:.1f}x)")
+        if res[name].useful_utilization < g_adapt - GOODPUT_MARGIN:
+            return (f"goodput {res[name].useful_utilization:.3f} vs "
+                    f"adaptive {g_adapt:.3f}")
+        return None
+
+    summary = []
+    for n in STATIC_RESERVES:
+        how = loses(f"static{n}")
+        summary.append(f"static{n}: " + (how or "does NOT lose"))
+        if gate and how is None:
+            print(f"FAIL: static{n} matches adaptive on every phase at "
+                  f"equal goodput — the drifting trace no longer "
+                  f"separates them", file=sys.stderr)
+            sys.exit(1)
+    for i in range(len(bounds)):
+        if gate and adapt[i] > allowed[i] + 1e-9:
+            print(f"FAIL: adaptive hi-prio p95 {adapt[i]:.2f}ms on "
+                  f"phase {i} exceeds the {ADAPT_ENVELOPE}x envelope "
+                  f"of the per-phase-best static "
+                  f"({best[i]:.2f}ms, allowed {allowed[i]:.2f}ms)",
+                  file=sys.stderr)
+            sys.exit(1)
+    rows.append(row("themis/drift/adaptive_vs_static", 0.0,
+                    "; ".join(summary)))
+    return rows
+
+
 def _policies() -> list[tuple[str, PolicyConfig]]:
     kw = {"starvation_bound_ms": STARVATION_BOUND_MS}
     return [
@@ -102,10 +276,14 @@ def _policies() -> list[tuple[str, PolicyConfig]]:
     ]
 
 
-def main(quick: bool = False, ckpt_gate: bool = False) -> list[str]:
-    """`quick` shrinks the trace for the CI benchmarks-smoke job;
-    `ckpt_gate` enforces the >= 50% reclaim acceptance bound at the
-    finest interactive rate (exits non-zero below it)."""
+def main(quick: bool = False, ckpt_gate: bool = False,
+         adaptive_gate: bool = False) -> list[str]:
+    """`quick` shrinks the rate sweep for the CI benchmarks-smoke job
+    (the drifting-rate section always runs full size — it is cheap and
+    its per-phase p95s need their sample counts); `ckpt_gate` enforces
+    the >= 50% reclaim acceptance bound at the finest interactive rate;
+    `adaptive_gate` enforces the predictive-reservation bounds on the
+    drifting trace (either gate exits non-zero on failure)."""
     reg = _registry()
     horizon = 400.0 if quick else HORIZON_MS
     periods = (40.0,) if quick else (40.0, 20.0, 10.0)
@@ -185,9 +363,11 @@ def main(quick: bool = False, ckpt_gate: bool = False) -> list[str]:
                       f"({p95_pre:.2f} -> {p95_ck:.2f} ms)",
                       file=sys.stderr)
                 sys.exit(1)
+    rows.extend(adaptive_section(gate=adaptive_gate))
     return rows
 
 
 if __name__ == "__main__":
     main(quick="--quick" in sys.argv[1:],
-         ckpt_gate="--ckpt" in sys.argv[1:])
+         ckpt_gate="--ckpt" in sys.argv[1:],
+         adaptive_gate="--adaptive" in sys.argv[1:])

@@ -6,6 +6,7 @@
 - module.py     decoupled AOT compilation, relocation, weight loading
 - bus.py        layout adaptors (bus virtualisation analogue)
 - scheduler.py  resource-elastic space-time policy (replicate/replace/reuse)
+- arrivals.py   online arrival-rate estimation (predictive reservation)
 - checkpoint.py context save/restore for preempted chunks (priced, migratable)
 - fabric.py     one scheduling contract over many shells (locality + stealing)
 - simulator.py  discrete-event execution of the policy (tests + Fig 15)
@@ -13,6 +14,7 @@
 - zoo.py        module builders (mandelbrot/sobel/matmul/LM)
 """
 from repro.core.allocator import BuddyAllocator, Range
+from repro.core.arrivals import ArrivalEstimator
 from repro.core.checkpoint import CheckpointManager, ChunkCheckpoint
 from repro.core.daemon import Daemon, JobHandle
 from repro.core.fabric import Fabric, FabricJob

@@ -118,6 +118,16 @@ class Daemon:
         return dict(self.fabric.ckpt.stats) \
             if self.fabric.ckpt is not None else {}
 
+    @property
+    def reserve_history(self) -> dict[str, list]:
+        """Per-shell effective-reservation trace `[(t_ms, slots), ...]`
+        recorded on change — the adaptive reservation's sizing decisions
+        (`PolicyConfig.reserve_mode == "adaptive"`, fed from the wall
+        clock at `submit`); static mode records its constant once."""
+        with self._lock:
+            return {name: list(st.reserve_history)
+                    for name, st in self.fabric.states.items()}
+
     # -- public API (paper Listings 4/5) --------------------------------------
 
     def run(self, tenant: str, jobs: list[dict]) -> list[JobHandle]:

@@ -22,6 +22,12 @@ fabric adds the cross-shell arbitration —
     chunk still runs exactly once;
   - a shared `CostModel` so online `est_chunk_ms` refinement on any
     shell improves placement everywhere;
+  - a shared `ArrivalEstimator` (`PolicyConfig.reserve_mode ==
+    "adaptive"`, core/arrivals.py): every admitted job is observed once
+    at `submit`, and each shell sizes its effective interactive
+    reservation from the predicted demand every scheduling pass —
+    dispatch ECT and steal sizing treat reserved slots as capacity the
+    batch class cannot use;
   - a shared `CheckpointManager` (`PolicyConfig.ckpt`,
     core/checkpoint.py): evicted chunks keep their progress, and
     **checkpointed migration** lets stealing move a checkpointed chunk
@@ -58,6 +64,7 @@ import itertools
 from collections import deque
 from typing import Any, Iterable, Mapping
 
+from repro.core.arrivals import ArrivalEstimator
 from repro.core.checkpoint import CheckpointManager
 from repro.core.registry import parse_transfer_pair
 from repro.core.scheduler import Assignment, CostModel, PolicyConfig, \
@@ -128,6 +135,17 @@ class Fabric:
         # migrates them, and accounting is fabric-wide
         self.ckpt = CheckpointManager(registry, self.policy) \
             if self.policy.ckpt else None
+        # predictive reservation: one arrival estimator shared by every
+        # shell (like the cost model), fed once per job at admission —
+        # a stolen sub-request's re-submit is a placement move, not an
+        # arrival, so per-shell submits never observe
+        self.arrivals = ArrivalEstimator(self.policy.arrival_alpha) \
+            if self.policy.reserve_mode == "adaptive" else None
+        # tenant -> last service time, shared by every shell: the
+        # reservation's starvation waiver must see fabric-wide service
+        # (a stolen sub-request of a tenant served elsewhere is
+        # backlogged, not starved)
+        self.tenant_service: dict[str, float] = {}
         self.states: dict[str, SchedulerState] = {}
         self.speeds: dict[str, float] = {}   # true relative clocks
         self.ckpt_capable: dict[str, bool] = {}
@@ -153,7 +171,9 @@ class Fabric:
             st = SchedulerState(
                 n_slots, registry, self.policy, cost=self.cost,
                 speed=speed if self.policy.speed_aware else 1.0,
-                ckpt=self.ckpt, ckpt_capable=capable, name=name)
+                ckpt=self.ckpt, ckpt_capable=capable, name=name,
+                arrivals=self.arrivals,
+                tenant_last_ms=self.tenant_service)
             st._rid = self._rid
             st._aid = self._aid
             # progress estimation must know a stolen chunk's transfer
@@ -295,7 +315,15 @@ class Fabric:
         optional precomputed per-shell `_backlog_ms` cache (one
         admission drain walks every queue once, not once per job)."""
         b = self._backlog_ms(name) if backlog is None else backlog[name]
-        return (b + self._job_ms(job, name)) / self.states[name].alloc.n
+        st = self.states[name]
+        # a reserved slot is not capacity for this job's class: spread
+        # the work over the slots its placements may actually use, so
+        # dispatch stays consistent with the admission reservation
+        # (sized at the fabric's clock — the shell's own may lag)
+        slots = max(1, st.alloc.n
+                    - st.reserve_for_class(job.priority, job.module,
+                                           now=self._now))
+        return (b + self._job_ms(job, name)) / slots
 
     # -- submission -----------------------------------------------------------
 
@@ -329,6 +357,14 @@ class Fabric:
         else:
             payloads = list(chunks)
             n_chunks = len(payloads)
+        if self.arrivals is not None:
+            # one observation per admitted job, before dispatch: the
+            # predictive reservation reacts to the *offered* arrival
+            # stream, independent of where the job lands
+            self.arrivals.observe(
+                priority, max(self._now, now),
+                service_ms=self.cost.est_chunk_ms(module, min_fp),
+                footprint=min_fp)
         gid = next(self._rid)
         job = FabricJob(gid, tenant, module, n_chunks, payloads,
                         priority=priority, deadline_ms=deadline_ms,
@@ -412,6 +448,11 @@ class Fabric:
         drain_ms = self._backlog_ms(victim) / vst.alloc.n \
             if priced or self.ckpt is not None else 0.0
         best, best_key = None, None
+        # the thief's reservation and free-window count depend only on
+        # (interactive-or-not, min footprint); memoize per scan so a
+        # deep victim backlog costs a handful of computations, not one
+        # per queued request
+        win_cache: dict[tuple[bool, int], tuple[int, int]] = {}
         for q in vst.queues.values():
             for r in q:
                 if r.pending <= 0:
@@ -422,6 +463,22 @@ class Fabric:
                 min_fp = self._min_fp(r.module)
                 if min_fp > tst.alloc.largest_free():
                     continue              # thief can't host this module
+                # reserved slots are not steal targets: size the steal
+                # to the windows this request's class may actually use
+                # on the thief, and skip the candidate outright when
+                # only reserved capacity is left over there
+                ck = (r.priority >= self.policy.reserve_priority,
+                      min_fp)
+                if ck in win_cache:
+                    reserve, n_win = win_cache[ck]
+                else:
+                    reserve = tst.reserve_for_class(
+                        r.priority, r.module, now=now)
+                    n_win = tst._n_free_ranges(
+                        min_fp, within=tst.alloc.n - reserve)
+                    win_cache[ck] = (reserve, n_win)
+                if reserve > 0 and n_win == 0:
+                    continue
                 reconf_ms = 0.0 if self._hosts(tst, r.module) \
                     else self.policy.reconfig_penalty_ms
                 # tail steals take pristine chunks only — checkpointed
@@ -444,7 +501,8 @@ class Fabric:
                 if tail_ok and pristine > 0:
                     key = (-r.pending, r.rid, 0)
                     if best_key is None or key < best_key:
-                        best, best_key = (r, entry, min_fp, "tail"), key
+                        best, best_key = \
+                            (r, entry, min_fp, "tail", n_win), key
                 # checkpointed migration: the request's *front* pending
                 # chunk is a preemption victim carrying a checkpoint;
                 # move it (always gated, even on a homogeneous pair)
@@ -463,17 +521,18 @@ class Fabric:
                             key = (-r.pending, r.rid, 1)
                             if best_key is None or key < best_key:
                                 best, best_key = \
-                                    (r, entry, min_fp, "resume"), key
+                                    (r, entry, min_fp, "resume",
+                                     n_win), key
         if best is None:
             return 0
-        req, (job, cmap), min_fp, mode = best
+        req, (job, cmap), min_fp, mode, n_win = best
         # steal what the thief can place right now: the count of free
-        # aligned windows at the module's smallest footprint (raw free
-        # slots over-count under fragmentation); stealing re-evaluates
+        # aligned windows (outside any reservation the stolen class may
+        # not enter) at the module's smallest footprint — raw free
+        # slots over-count under fragmentation; stealing re-evaluates
         # on every event, so a deep backlog drains incrementally.  A
         # resume-steal moves exactly the one checkpointed front chunk.
-        k = 1 if mode == "resume" else \
-            min(req.pending, max(1, tst._n_free_ranges(min_fp)))
+        k = 1 if mode == "resume" else min(req.pending, max(1, n_win))
         # the stolen sub-request inherits the victim's aging anchor
         # (time since submit or last service), so starvation-aging
         # credit earned queueing behind the busy shell survives the move

@@ -20,7 +20,19 @@ benchmark) and the live daemon executor:
     with only its remaining fraction plus the priced restore cost.
   - RESERVATION (PolicyConfig.reserve_slots): the last N slots are held
     back from non-interactive requests so a predicted interactive burst
-    finds capacity without evicting anyone.
+    finds capacity without evicting anyone.  With
+    PolicyConfig.reserve_mode == "adaptive" the count is no longer a
+    static knob: an ArrivalEstimator (core/arrivals.py) tracks the
+    observed interactive arrival rate and every scheduling pass sizes
+    the effective reservation from predicted demand over the next
+    reconfiguration+chunk horizon, clamped to [0, reserve_slots_max].
+    A request whose *aged* effective priority reaches reserve_priority
+    may use reserved slots once its tenant has gone a full starvation
+    bound with no service at all (the reservation defers batch work,
+    it must not starve it — but a backlogged-and-served tenant never
+    pierces the burst headroom), and a reservation a module cannot fit
+    under is shrunk to the largest feasible value, never silently
+    dropped.
 
 Priority model: each request carries an integer `priority` (higher wins)
 and an optional relative `deadline_ms`.  The effective priority ages by
@@ -39,6 +51,7 @@ from collections import deque
 from typing import Any, Optional
 
 from repro.core.allocator import BuddyAllocator, Range
+from repro.core.arrivals import ArrivalEstimator
 from repro.core.checkpoint import CheckpointManager
 from repro.core.registry import ModuleDescriptor
 
@@ -172,9 +185,19 @@ class PolicyConfig:
     # base priority < reserve_priority, so a predicted interactive burst
     # finds capacity without evicting anyone — the cheap alternative to
     # checkpointed preemption.  A reservation that would leave a module
-    # unplaceable forever is waived for that request (no wedged jobs)
+    # unplaceable forever is shrunk for that request (no wedged jobs)
     reserve_slots: int = 0
     reserve_priority: int = 1
+    # -- predictive reservation (core/arrivals.py) -----------------------
+    # "static" (default) sizes the reservation from reserve_slots;
+    # "adaptive" sizes it every scheduling pass from the observed
+    # interactive arrival rate (a Little's-law demand estimate over the
+    # next reconfiguration+chunk horizon), clamped to
+    # [0, reserve_slots_max] — reserve_slots is ignored in that mode
+    reserve_mode: str = "static"
+    reserve_slots_max: int = 1
+    # EWMA weight of the newest inter-arrival/service observation
+    arrival_alpha: float = 0.3
 
 
 class CostModel:
@@ -221,7 +244,9 @@ class SchedulerState:
                  policy: PolicyConfig | None = None,
                  cost: CostModel | None = None, speed: float = 1.0,
                  ckpt: CheckpointManager | None = None,
-                 ckpt_capable: bool = True, name: str | None = None):
+                 ckpt_capable: bool = True, name: str | None = None,
+                 arrivals: ArrivalEstimator | None = None,
+                 tenant_last_ms: dict | None = None):
         self.alloc = BuddyAllocator(n_slots)
         self.registry = registry
         self.policy = policy or PolicyConfig()
@@ -242,6 +267,29 @@ class SchedulerState:
             self.ckpt = CheckpointManager(registry, self.policy)
         else:
             self.ckpt = None
+        if self.policy.reserve_mode not in ("static", "adaptive"):
+            raise ValueError(
+                f"reserve_mode must be 'static' or 'adaptive', got "
+                f"{self.policy.reserve_mode!r}")
+        # predictive reservation: a Fabric shares one ArrivalEstimator
+        # across shells and feeds it at job admission (so stolen
+        # re-submits are never double-counted); a bare state owns its
+        # own and observes its direct submits
+        if arrivals is not None:
+            self.arrivals = arrivals
+            self._observe_arrivals = False
+        elif self.policy.reserve_mode == "adaptive":
+            self.arrivals = ArrivalEstimator(self.policy.arrival_alpha)
+            self._observe_arrivals = True
+        else:
+            self.arrivals = None
+            self._observe_arrivals = False
+        # effective-reservation trace [(t_ms, slots), ...], recorded on
+        # change; the per-pass cache keeps one sizing decision coherent
+        # across every placement/preemption/steal of a schedule() pass
+        self.reserve_history: list[tuple[float, int]] = []
+        self._reserve_last = 0
+        self._reserve_now: int | None = None
         self._save_ms_pending = 0.0       # victims' save cost -> preemptor
         # optional rid -> cross-shell transfer cost hook (a Fabric wires
         # it to the stolen sub-request table): a stolen chunk's transfer
@@ -251,6 +299,14 @@ class SchedulerState:
         # least-recently-served round robin: new tenants get priority
         self._served_at: dict[str, int] = {}
         self._serve_seq = 0
+        # tenant -> last chunk-issue time (ms): the starvation-waiver
+        # signal for reservation access (_tenant_starved).  A Fabric
+        # shares one map across shells (like the cost model): a tenant
+        # being served *anywhere* is not starved, so a stolen
+        # sub-request of a served-elsewhere tenant cannot pierce the
+        # thief's reserve
+        self._tenant_last_ms: dict[str, float] = \
+            {} if tenant_last_ms is None else tenant_last_ms
         self.resident: dict[tuple[int, int], tuple[str, int]] = {}
         #        (start, size) -> (module, footprint) for idle ranges too
         self.requests: dict[int, Request] = {}
@@ -275,6 +331,13 @@ class SchedulerState:
                       t_submit=now)
         self.requests[rid] = req
         self._now = max(self._now, now)
+        if self._observe_arrivals and self.arrivals is not None:
+            # bare-state path: a fabric observes at job admission instead
+            fp = min(self.registry.module(module).footprints)
+            self.arrivals.observe(
+                priority, self._now,
+                service_ms=self.cost.est_chunk_ms(module, fp),
+                footprint=fp)
         if tenant not in self.queues:
             self.queues[tenant] = deque()
             self._served_at.setdefault(tenant, -1)
@@ -427,28 +490,105 @@ class SchedulerState:
     # -- placement decision -----------------------------------------------------
 
     def _n_free_ranges(self, size: int, within: int | None = None) -> int:
+        """Number of *disjoint* free aligned windows of `size` slots —
+        a maximal non-overlapping packing, i.e. how many chunks could
+        actually run concurrently.  Buddy alignment yields disjoint
+        windows already; the packing scan keeps the count honest for
+        any allocator whose aligned starts overlap (counting every free
+        start would overstate `conc` in `_choose`'s rate model and skew
+        alternative selection toward over-replication)."""
         within = self.alloc.n if within is None else within
         n = 0
+        next_free = 0
         for start in self.alloc.aligned_starts(size):
+            if start < next_free:
+                continue                  # overlaps a counted window
             if start + size <= within and all(
                     i not in self.alloc.busy
                     for i in range(start, start + size)):
                 n += 1
+                next_free = start + size
         return n
 
-    def _reserve_for(self, req: Request) -> int:
-        """Slots at the top of the shell held back from `req`
-        (`PolicyConfig.reserve_slots`): 0 for interactive requests (base
-        priority >= reserve_priority) and 0 when honoring the
-        reservation would make the module unplaceable forever."""
-        n = self.policy.reserve_slots
-        if n <= 0 or req.priority >= self.policy.reserve_priority:
+    # adaptive reservation shrinks one level only once predicted demand
+    # falls this far below the round-down point: a single long gap in
+    # an exponential arrival stream must not flap the reservation off
+    # right before the stream's next burst (raising is immediate)
+    RESERVE_HYSTERESIS = 0.25
+
+    def effective_reserve(self, now: float | None = None) -> int:
+        """Slots currently held back for the interactive class: the
+        static `reserve_slots` knob, or — `reserve_mode == "adaptive"` —
+        the arrival estimator's predicted interactive demand over the
+        blocking-chunk + reconfiguration + service horizon (Little's
+        law: rate x wait-window x footprint), rounded with downward
+        hysteresis and clamped to `[0, reserve_slots_max]`."""
+        p = self.policy
+        if p.reserve_mode != "adaptive":
+            return p.reserve_slots
+        if self.arrivals is None or p.reserve_slots_max <= 0:
+            return 0
+        now = self._now if now is None else now
+        demand = self.arrivals.demand_slots(
+            p.reserve_priority, now,
+            overhead_ms=p.reconfig_penalty_ms, speed=self.speed)
+        target = int(demand + 0.5)
+        prev = self._reserve_last
+        if target < prev and demand > prev - 0.5 - self.RESERVE_HYSTERESIS:
+            target = prev               # inside the band: hold
+        return min(target, p.reserve_slots_max)
+
+    def _current_reserve(self, now: float | None = None) -> int:
+        """The pass-coherent reservation size: schedule() pins one value
+        per pass; callers outside a pass (fabric dispatch/steal sizing)
+        get a fresh computation at *their* clock — a fabric passes its
+        own `now` so staleness decay does not lag on a shell whose
+        local clock has not advanced in a while."""
+        return self.effective_reserve(now) if self._reserve_now is None \
+            else self._reserve_now
+
+    def reserve_for_class(self, priority: int, module: str,
+                          now: float | None = None) -> int:
+        """Slots at the top of the shell held back from a request of
+        effective `priority` targeting `module`: 0 for the interactive
+        class (priority >= reserve_priority).  A reservation the module
+        cannot fit under is *shrunk* to the largest value that still
+        leaves it a feasible window — one big-footprint batch module
+        must not silently disable interactive protection on the shell."""
+        n = self._current_reserve(now)
+        if n <= 0 or priority >= self.policy.reserve_priority:
             return 0
         n = min(n, self.alloc.n)
-        desc = self.registry.module(req.module)
+        desc = self.registry.module(module)
         if min(desc.footprints) > self.alloc.n - n:
-            return 0
+            n = max(0, self.alloc.n - min(desc.footprints))
         return n
+
+    def _tenant_starved(self, req: Request) -> bool:
+        """Has `req`'s tenant gone a full starvation bound with no
+        service at all?  A tenant that is merely *backlogged* — its
+        earlier requests are being served continuously, on this shell
+        or (fabric-shared map) on any other — is not starved, even
+        though its queued requests age from submit."""
+        last = self._tenant_last_ms.get(req.tenant)
+        anchor = req.t_submit if last is None else last
+        return (self._now - anchor) >= \
+            max(self.policy.starvation_bound_ms, 1e-9)
+
+    def _reserve_for(self, req: Request) -> int:
+        # starvation waiver: a request whose effective priority has
+        # *aged* into the interactive class AND whose tenant has gone a
+        # full starvation bound without any service may use the reserve
+        # — the reservation defers batch work, it must not starve a
+        # tenant forever.  A backlogged-but-served tenant's aged queue
+        # entries do not pierce the reserve (they are making progress;
+        # letting them in would poison the very burst headroom the
+        # reservation exists for).
+        eff = self.effective_priority(req)
+        if eff > req.priority and eff >= self.policy.reserve_priority \
+                and self._tenant_starved(req):
+            return 0
+        return self.reserve_for_class(req.priority, req.module)
 
     def _choose(self, req: Request,
                 multi_tenant: bool = False) -> tuple[int, Range, bool] | None:
@@ -619,6 +759,23 @@ class SchedulerState:
         """
         now = self._now if now is None else max(self._now, now)
         self._now = now
+        # pin one reservation size for the whole pass (adaptive mode
+        # recomputes from the arrival estimator; static mode returns the
+        # knob) so every placement, preemption and steal decision of
+        # this pass sees the same value, and record changes for the
+        # reserve_history trace
+        r = self.effective_reserve(now)
+        if r != self._reserve_last:
+            self.reserve_history.append((now, r))
+            self._reserve_last = r
+        self._reserve_now = r
+        try:
+            return self._schedule_locked(now, placed)
+        finally:
+            self._reserve_now = None
+
+    def _schedule_locked(self, now: float,
+                         placed: set[int] | None) -> list[Assignment]:
         out = []
         placed = set() if placed is None else placed
         while True:
@@ -668,6 +825,7 @@ class SchedulerState:
             out.append(a)
             placed.add(a.aid)
             req.t_last_served = now
+            self._tenant_last_ms[req.tenant] = now
             self._advance_rr(req.tenant)
         return out
 

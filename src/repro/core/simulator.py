@@ -93,6 +93,11 @@ class SimResult:
     ckpt_saves: int = 0                 # context-save operations
     ckpt_restores: int = 0              # chunks resumed from a checkpoint
     ckpt_migrations: int = 0            # checkpoints moved across shells
+    # shell name -> [(t_ms, effective reserve), ...] recorded on change
+    # (adaptive reservation's sizing trace; static mode records its
+    # constant once, a zero reservation records nothing)
+    reserve_history: dict[str, list] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def mean_latency(self) -> float:
@@ -279,7 +284,8 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
             meta[job.gid] = {"tenant": obj.tenant,
                              "priority": obj.priority,
                              "deadline_ms": obj.deadline_ms,
-                             "n_chunks": obj.n_chunks}
+                             "n_chunks": obj.n_chunks,
+                             "t_submit": now}
         else:
             shell, a = obj
             if not fabric.complete(shell, a, now=now):
@@ -342,4 +348,7 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
                      reclaimed_ms=reclaimed_ms,
                      ckpt_saves=cstats.get("saves", 0),
                      ckpt_restores=cstats.get("restores", 0),
-                     ckpt_migrations=cstats.get("migrations", 0))
+                     ckpt_migrations=cstats.get("migrations", 0),
+                     reserve_history={
+                         name: list(st.reserve_history)
+                         for name, st in fabric.states.items()})

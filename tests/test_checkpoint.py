@@ -155,7 +155,10 @@ offpath_jobs_strategy = st.lists(
 def test_ckpt_off_is_byte_identical(raw, sizes, preemptive):
     """`ckpt=False` — spelled implicitly, or explicitly with zeroed
     save/restore costs and zero reservation — reproduces the PR 3
-    scheduler/simulator trace byte-for-byte on every SimResult field."""
+    scheduler/simulator trace byte-for-byte on every SimResult field.
+    The predictive-reservation knobs are inert on the static path:
+    `reserve_slots_max`/`arrival_alpha` only matter under
+    `reserve_mode="adaptive"`."""
     jobs = [SimJob(t, u, m, c, priority=p, affinity=aff)
             for t, u, m, c, p, aff in raw]
     shells = {"a": sizes[0], "b": sizes[1]}
@@ -165,7 +168,10 @@ def test_ckpt_off_is_byte_identical(raw, sizes, preemptive):
                         PolicyConfig(preemptive=preemptive, steal=True,
                                      ckpt=False, ckpt_save_ms=0.0,
                                      ckpt_restore_ms=0.0,
-                                     reserve_slots=0))
+                                     reserve_slots=0,
+                                     reserve_mode="static",
+                                     reserve_slots_max=7,
+                                     arrival_alpha=0.9))
     assert dataclasses.asdict(base) == dataclasses.asdict(explicit)
     # the new counters are inert on the off path
     assert base.discarded_ms == base.wasted_time
