@@ -19,27 +19,71 @@ class Range:
         return tuple(range(self.start, self.start + self.size))
 
 
+class _BusySet(set):
+    """Busy-slot set that mirrors every mutation into the allocator's
+    bitmask, so window-freeness stays one shift+mask even for callers
+    (tests, diagnostics) that poke `alloc.busy` directly."""
+
+    def __init__(self, owner: "BuddyAllocator"):
+        super().__init__()
+        self._owner = owner
+
+    def add(self, i):
+        super().add(i)
+        self._owner._mask |= 1 << i
+
+    def discard(self, i):
+        if i in self:
+            super().discard(i)
+            self._owner._mask &= ~(1 << i)
+
+    def remove(self, i):
+        super().remove(i)
+        self._owner._mask &= ~(1 << i)
+
+    def update(self, *others):
+        for o in others:
+            for i in o:
+                self.add(i)
+
+    def clear(self):
+        super().clear()
+        self._owner._mask = 0
+
+
 class BuddyAllocator:
     def __init__(self, n_slots: int):
         assert n_slots >= 1
         self.n = n_slots            # any count; allocations stay
-        self.busy: set[int] = set()  # power-of-two sized & size-aligned
+        # busy slots as a bitmask, kept in lockstep with `busy`: window
+        # freeness is one shift+mask instead of a per-slot set probe
+        # (the scheduler's free-window scans are on the per-event path)
+        self._mask = 0
+        self.busy: set[int] = _BusySet(self)  # po2 sized & size-aligned
+        self._lf_mask, self._lf_best = -1, 0  # largest_free memo
 
     # -- queries ------------------------------------------------------------
 
     def free_slots(self) -> list[int]:
         return [i for i in range(self.n) if i not in self.busy]
 
+    def window_free(self, start: int, size: int) -> bool:
+        """Are slots [start, start+size) all free?  O(1) via the mask."""
+        return (self._mask >> start) & ((1 << size) - 1) == 0
+
     def can_alloc(self, size: int, within: int | None = None) -> bool:
         return self.find(size, within) is not None
 
     def largest_free(self) -> int:
+        if self._mask == self._lf_mask:
+            return self._lf_best       # allocation state unchanged
         size = 1
         best = 0
         while size <= self.n:
             if self.find(size) is not None:
                 best = size
             size *= 2
+        self._lf_mask, self._lf_best = self._mask, best
         return best
 
     def aligned_starts(self, size: int) -> range:
@@ -55,10 +99,11 @@ class BuddyAllocator:
         if size > self.n:
             return None
         limit = self.n if within is None else within
+        window = (1 << size) - 1
         for start in self.aligned_starts(size):
             if start + size > limit:
                 break
-            if all(i not in self.busy for i in range(start, start + size)):
+            if (self._mask >> start) & window == 0:
                 return Range(start, size)
         return None
 
@@ -68,18 +113,21 @@ class BuddyAllocator:
         r = self.find(size)
         if r is None:
             return None
-        self.busy.update(r.slots)
+        set.update(self.busy, r.slots)    # one mask op, not per-slot
+        self._mask |= ((1 << r.size) - 1) << r.start
         return r
 
     def alloc_at(self, r: Range) -> None:
-        assert all(i not in self.busy for i in r.slots), "double alloc"
+        assert self.window_free(r.start, r.size), "double alloc"
         assert r.start % r.size == 0, "unaligned"
-        self.busy.update(r.slots)
+        set.update(self.busy, r.slots)
+        self._mask |= ((1 << r.size) - 1) << r.start
 
     def free(self, r: Range) -> None:
         for i in r.slots:
             assert i in self.busy, f"double free of slot {i}"
-            self.busy.discard(i)
+            set.discard(self.busy, i)
+        self._mask &= ~(((1 << r.size) - 1) << r.start)
 
     @property
     def utilization(self) -> float:

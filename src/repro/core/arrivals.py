@@ -82,6 +82,12 @@ class ArrivalEstimator:
                              f"got {alpha}")
         self.alpha = float(alpha)
         self._classes: dict[int, ClassStats] = {}
+        # demand_slots memo: the estimate is queried once per shell per
+        # event (reservation sampling, dispatch ECT, steal sizing) but
+        # only moves when the clock or an observation does
+        self._version = 0
+        self._demand_at: tuple[float, int] | None = None
+        self._demand: dict[tuple[int, float, float], float] = {}
 
     def observe(self, priority: int, now: float,
                 service_ms: float = 0.0, footprint: int = 1) -> None:
@@ -92,6 +98,7 @@ class ArrivalEstimator:
         the reservation predicts slot *occupancy*, so the estimate
         rides along with the arrival clock.
         """
+        self._version += 1
         c = self._classes.get(priority)
         if c is None:
             self._classes[priority] = ClassStats(
@@ -140,7 +147,18 @@ class ArrivalEstimator:
         capacity for the full window it would otherwise wait through
         (batch residual, then reconfiguration, then its own service).
         The caller passes the shell's reconfiguration penalty as
-        `overhead_ms` and its decision speed."""
+        `overhead_ms` and its decision speed.
+
+        Memoized per (now, observation version): one computation serves
+        every same-instant query (per-shell reservation sampling,
+        dispatch ECT, steal sizing), returning the identical floats."""
+        if self._demand_at != (now, self._version):
+            self._demand_at = (now, self._version)
+            self._demand = {}
+        key = (min_priority, overhead_ms, speed)
+        hit = self._demand.get(key)
+        if hit is not None:
+            return hit
         blocking = self.blocking_ms(min_priority)
         total = 0.0
         for p, c in self._classes.items():
@@ -151,4 +169,5 @@ class ArrivalEstimator:
                 continue
             total += rate * ((blocking + c.service_ms) / speed
                              + overhead_ms) * c.footprint
+        self._demand[key] = total
         return total

@@ -197,6 +197,34 @@ class Fabric:
         self._now = 0.0
         self.stats = {"dispatched": 0, "local_dispatch": 0,
                       "steals": 0, "stolen_chunks": 0}
+        # -- incremental event-heap core (docs/simulator.md) -------------
+        # shells whose scheduling state mutated since their last pass;
+        # schedule() reschedules only these (plus time-triggered wakes).
+        # External mutations reach it through SchedulerState.on_change,
+        # so the daemon's direct-state path invalidates too.
+        self._dirty: set[str] = set(self.states)
+        for name, st in self.states.items():
+            st.on_change = (lambda nm: lambda: self._dirty.add(nm))(name)
+        # per-shell earliest instant a time trigger (starvation aging /
+        # tenant-starvation waiver) can change a clean shell's outcome
+        self._wake: dict[str, float] = {}
+        # memoized exact _backlog_ms per shell, keyed by the shell's
+        # mutation version and the shared cost model's version — the
+        # cached value is the recomputation's own floats, so admission
+        # ECT and steal pricing stay bit-identical to a fresh walk
+        self._backlog_cache: dict[str, tuple[tuple[int, int], float]] = {}
+        # failed steal attempts, keyed (victim, thief) -> the state
+        # fingerprint they failed under: a fruitless _steal_from is a
+        # pure function of (victim version, thief version, cost version,
+        # thief reservation), so until one of those moves the same scan
+        # would fail again and is skipped outright
+        self._steal_fail: dict[tuple[str, str],
+                               tuple[int, int, int, int]] = {}
+        self._cost_seen = self.cost.version
+        # reference switch: treat every shell as dirty on every pass
+        # (the pre-refactor reschedule-everything core; equivalence
+        # property tests and the throughput bench baseline drive it)
+        self.full_reschedule = False
 
     @classmethod
     def from_registry(cls, registry, name: str,
@@ -276,8 +304,17 @@ class Fabric:
         queued chunks at the module's smallest footprint plus one chunk
         estimate per in-flight assignment (including its reconfiguration
         penalty, which that chunk is actually paying), at the shell's
-        (decision) speed."""
+        (decision) speed.
+
+        Memoized on (shell mutation version, cost-model version): the
+        cache returns the exact floats of the last recomputation, never
+        an incrementally folded sum — float addition is not associative,
+        and this estimate feeds bit-pinned placement decisions."""
         st = self.states[name]
+        key = (st._version, self.cost.version)
+        hit = self._backlog_cache.get(name)
+        if hit is not None and hit[0] == key:
+            return hit[1]
         total = 0.0
         for q in st.queues.values():
             for r in q:
@@ -298,6 +335,7 @@ class Fabric:
             if a.reconfigure:
                 t += self.policy.reconfig_penalty_ms
             total += t
+        self._backlog_cache[name] = (key, total)
         return total
 
     def _job_ms(self, job: FabricJob, shell: str) -> float:
@@ -569,21 +607,41 @@ class Fabric:
     def _steal(self, now: float,
                placed: dict[str, set]) -> list[tuple[str, Assignment]]:
         out = []
+        # victim ranking hoisted out of the thief loop: pendings only
+        # change when a steal actually lands (steal_pending + the
+        # thief's re-submit + its schedule call), so the ranked list is
+        # rebuilt exactly then and the steal order stays byte-identical
+        # to ranking from scratch per thief
+        ranked: list[str] | None = None
         while True:
             moved = False
             for thief, tst in self.states.items():
                 if tst.alloc.largest_free() == 0 or self._pending(tst):
                     continue              # busy, or has its own backlog
-                victims = sorted(
-                    (n for n in self.states
-                     if n != thief and self._pending(self.states[n]) > 0),
-                    key=lambda n: (-self._pending(self.states[n]), n))
-                for victim in victims:
+                if ranked is None:
+                    ranked = sorted(
+                        (n for n in self.states
+                         if self._pending(self.states[n]) > 0),
+                        key=lambda n: (-self._pending(self.states[n]), n))
+                for victim in ranked:
+                    if victim == thief:
+                        continue
+                    # a failed scan is pure in this fingerprint: every
+                    # input _steal_from reads (victim queues + their
+                    # checkpoint records, thief residency/allocation/
+                    # reservation, cost estimates; `now` only through
+                    # the already-sampled reservation) is covered by it
+                    fp = (self.states[victim]._version, tst._version,
+                          self.cost.version, tst._reserve_last)
+                    if self._steal_fail.get((victim, thief)) == fp:
+                        continue
                     if self._steal_from(victim, thief, now):
                         out.extend((thief, a) for a in
                                    tst.schedule(now, placed=placed[thief]))
                         moved = True
+                        ranked = None
                         break
+                    self._steal_fail[(victim, thief)] = fp
             if not moved:
                 return out
 
@@ -591,11 +649,33 @@ class Fabric:
 
     def schedule(self, now: float | None = None) \
             -> list[tuple[str, Assignment]]:
-        """Dispatch admitted jobs, fill every shell's free slots, then
-        let idle shells steal.  Returns (shell_name, Assignment) pairs;
-        preemption victims are reported through `drain_preempted()`."""
+        """Dispatch admitted jobs, fill the free slots of every *dirty*
+        shell, then let idle shells steal.  Returns (shell_name,
+        Assignment) pairs; preemption victims are reported through
+        `drain_preempted()`.
+
+        A shell not in the dirty set is at a scheduling fixpoint: its
+        last pass ran to "nothing more placeable" and nothing since has
+        changed what _pick/_choose/_preempt_for would see.  Skipping it
+        is therefore a byte-identical no-op elision, provided every way
+        the fixpoint can break re-dirties the shell first: external
+        mutations (submit/complete/abort/steal — SchedulerState.on_change),
+        admission dispatch, a cost-model estimate moving (version check
+        below), the effective reservation changing (sampled here every
+        event, which also keeps reserve_history exact), a starvation
+        boundary crossing (the wake times), or the same-pass preemption
+        guard expiring (placed assignments become evictable at the next
+        event).  docs/simulator.md derives the invariant."""
         now = self._now if now is None else max(self._now, now)
         self._now = now
+        run, self._dirty = self._dirty, set()
+        if self.full_reschedule:
+            run.update(self.states)
+        if self.cost.version != self._cost_seen:
+            # a refined estimate moves placement and steal economics on
+            # every shell at once (the model is shared)
+            self._cost_seen = self.cost.version
+            run.update(self.states)
         if self._admission:
             # one backlog walk for the whole drain; each dispatched
             # job's own work is folded in incrementally, which is
@@ -606,15 +686,40 @@ class Fabric:
                 if not job.failed:
                     shell = self._dispatch(job, backlog)
                     backlog[shell] += self._job_ms(job, shell)
+                    run.add(shell)
+        for name, st in self.states.items():
+            # the reschedule-everything core advanced every shell's
+            # clock and sampled its reservation on every pass; both are
+            # per-event effects, not per-dirty-shell effects
+            st._now = max(st._now, now)
+            if name in run:
+                continue
+            prev = st._reserve_last
+            if st.sample_reserve(now) != prev:
+                run.add(name)             # reservation moved: re-place
+            elif now >= self._wake.get(name, float("-inf")):
+                run.add(name)             # aging/starvation boundary
         # one placed-set per shell for the whole pass: an assignment
         # issued here must not be preempted by a later steal-path
         # schedule call at the same instant (same-pass churn guard)
         placed: dict[str, set] = {name: set() for name in self.states}
         out = [(name, a) for name, st in self.states.items()
+               if name in run
                for a in st.schedule(now, placed=placed[name])]
         if self.policy.steal and self.policy.elastic \
-                and len(self.states) > 1:
+                and len(self.states) > 1 and run:
+            # with no shell rescheduled, nothing a steal gate reads has
+            # changed since the last pass ended with "no steal lands"
             out.extend(self._steal(now, placed))
+        for name, st in self.states.items():
+            if name in run:
+                self._wake[name] = st.next_wake(now)
+            if placed[name] and self.policy.preemptive \
+                    and st.pending_chunks() > 0:
+                # assignments issued this pass were preemption-exempt
+                # (same-pass churn guard); at the next event they are
+                # fair game, so the still-backlogged shell must re-run
+                self._dirty.add(name)
         return out
 
     def complete(self, shell: str, a: Assignment,

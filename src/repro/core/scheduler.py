@@ -221,6 +221,9 @@ class CostModel:
         self.registry = registry
         self.alpha = alpha
         self._est: dict[tuple[str, int], float] = {}
+        # bumped on every observation: backlog/ECT caches keyed on it
+        # are invalidated fabric-wide the moment an estimate moves
+        self.version = 0
 
     def est_chunk_ms(self, module: str, footprint: int,
                      speed: float = 1.0) -> float:
@@ -237,6 +240,7 @@ class CostModel:
         prev = self._est.get(key)
         self._est[key] = ms if prev is None else \
             self.alpha * ms + (1.0 - self.alpha) * prev
+        self.version += 1
 
 
 class SchedulerState:
@@ -316,6 +320,29 @@ class SchedulerState:
         self._rid = itertools.count()
         self._aid = itertools.count()
         self._now = 0.0
+        # incrementally maintained unissued-chunk count (pending_chunks
+        # is on the fabric's per-event dispatch and steal paths)
+        self._pending_n = 0
+        # monotonically bumped on any mutation that can move the shell's
+        # estimated backlog; the fabric keys its _backlog_ms cache on it
+        self._version = 0
+        # optional zero-arg callback fired on external mutations
+        # (submit/abort/complete/steal): a Fabric wires it to its
+        # dirty-shell set so direct state access — the daemon's legacy
+        # single-shell path — still invalidates incremental scheduling
+        self.on_change = None
+
+    # -- incremental bookkeeping ----------------------------------------------
+
+    def _bump(self) -> None:
+        """A scheduling-internal mutation changed the backlog."""
+        self._version += 1
+
+    def _touch(self) -> None:
+        """An external mutation changed the shell's scheduling state."""
+        self._version += 1
+        if self.on_change is not None:
+            self.on_change()
 
     # -- queue management -----------------------------------------------------
 
@@ -342,6 +369,8 @@ class SchedulerState:
             self.queues[tenant] = deque()
             self._served_at.setdefault(tenant, -1)
         self.queues[tenant].append(req)
+        self._pending_n += n_chunks
+        self._touch()
         return req
 
     def abort(self, rid: int) -> None:
@@ -352,12 +381,14 @@ class SchedulerState:
         head-of-line blocked by a dead request.
         """
         req = self.requests.get(rid)
-        if req is None or req.finished:
-            return
+        if req is None or req.failed or req.finished:
+            return                        # repeat aborts are no-ops
+        self._pending_n -= len(req._chunks)  # failed -> pending reads 0
         req.failed = True
         if self.ckpt is not None:
             self.ckpt.drop_request(rid)   # dead chunks never resume
         self._pop_finished(req)
+        self._touch()
 
     def steal_pending(self, rid: int, k: int) -> list[int]:
         """Remove up to `k` unissued chunks from the *tail* of a request's
@@ -383,7 +414,10 @@ class SchedulerState:
                 break
             take.append(req._chunks.pop())
         req.n_chunks -= len(take)
+        self._pending_n -= len(take)
         self._pop_finished(req)
+        if take:
+            self._touch()
         return take
 
     def steal_front(self, rid: int, k: int) -> list[int]:
@@ -399,11 +433,19 @@ class SchedulerState:
         for _ in range(min(k, len(req._chunks))):
             take.append(req._chunks.popleft())
         req.n_chunks -= len(take)
+        self._pending_n -= len(take)
         self._pop_finished(req)
+        if take:
+            self._touch()
         return take
 
     def pending_chunks(self) -> int:
-        """Unissued chunks across every queued request (backlog metric)."""
+        """Unissued chunks across every queued request (backlog metric).
+        O(1): maintained at every queue mutation (see _pending_chunks_slow
+        for the defining recomputation, cross-checked by the test suite)."""
+        return self._pending_n
+
+    def _pending_chunks_slow(self) -> int:
         return sum(r.pending for q in self.queues.values() for r in q)
 
     def _pop_finished(self, req: Request) -> None:
@@ -503,9 +545,8 @@ class SchedulerState:
         for start in self.alloc.aligned_starts(size):
             if start < next_free:
                 continue                  # overlaps a counted window
-            if start + size <= within and all(
-                    i not in self.alloc.busy
-                    for i in range(start, start + size)):
+            if start + size <= within and \
+                    self.alloc.window_free(start, size):
                 n += 1
                 next_free = start + size
         return n
@@ -537,6 +578,50 @@ class SchedulerState:
         if target < prev and demand > prev - 0.5 - self.RESERVE_HYSTERESIS:
             target = prev               # inside the band: hold
         return min(target, p.reserve_slots_max)
+
+    def sample_reserve(self, now: float) -> int:
+        """Evaluate the effective reservation at `now`, updating the
+        hysteresis anchor and recording changes in `reserve_history` —
+        exactly what the head of a scheduling pass does.  An incremental
+        fabric calls this once per event for *every* shell (scheduled or
+        not) so the sizing trace and the hysteresis state stay identical
+        to the reschedule-everything core; the call is idempotent at a
+        fixed (now, estimator state)."""
+        r = self.effective_reserve(now)
+        if r != self._reserve_last:
+            self.reserve_history.append((now, r))
+            self._reserve_last = r
+        return r
+
+    def next_wake(self, now: float) -> float:
+        """Earliest future instant at which this shell's scheduling
+        outcome can change with *no* state mutation in between: a queued
+        request crossing a starvation-aging boundary (its effective
+        priority steps, reordering _pick / enabling preemption), or a
+        tenant crossing the starvation bound (the reservation waiver
+        flips on).  With no pending work nothing time-driven can change
+        — completions and arrivals dirty the shell through events.  The
+        adaptive reservation is *not* a wake source: the fabric samples
+        it every event (`sample_reserve`).  Anchors only move forward,
+        so a stale stored wake fires early (a no-op reschedule), never
+        late."""
+        if self._pending_n <= 0:
+            return float("inf")
+        bound = max(self.policy.starvation_bound_ms, 1e-9)
+        wake = float("inf")
+        for q in self.queues.values():
+            for r in q:
+                if r.pending <= 0:
+                    continue
+                since = r.t_submit if r.t_last_served is None \
+                    else max(r.t_submit, r.t_last_served)
+                waited = max(0.0, now - since)
+                wake = min(wake, since + (int(waited // bound) + 1) * bound)
+                last = self._tenant_last_ms.get(r.tenant)
+                anchor = r.t_submit if last is None else last
+                if anchor + bound > now:
+                    wake = min(wake, anchor + bound)
+        return wake
 
     def _current_reserve(self, now: float | None = None) -> int:
         """The pass-coherent reservation size: schedule() pins one value
@@ -617,10 +702,9 @@ class SchedulerState:
         def free_reuse_range(fp: int) -> Range | None:
             for (start, size), (m, f) in self.resident.items():
                 if m == req.module and f == fp and size == fp \
-                        and start + size <= within:
-                    r = Range(start, size)
-                    if all(i not in self.alloc.busy for i in r.slots):
-                        return r
+                        and start + size <= within \
+                        and self.alloc.window_free(start, size):
+                    return Range(start, size)
             return None
 
         best = None  # (rate, reuse, fp, range, reconfigure)
@@ -715,6 +799,9 @@ class SchedulerState:
             self.alloc.free(a.rng)
             victim = self.requests[a.rid]
             victim.requeue_chunk(a.chunk)
+            if not victim.failed:         # failed -> pending reads 0
+                self._pending_n += 1
+            self._bump()
             if self.ckpt is not None and self.ckpt_capable \
                     and not victim.failed:
                 # snapshot the victim's progress; distinct windows save
@@ -764,11 +851,7 @@ class SchedulerState:
         # knob) so every placement, preemption and steal decision of
         # this pass sees the same value, and record changes for the
         # reserve_history trace
-        r = self.effective_reserve(now)
-        if r != self._reserve_last:
-            self.reserve_history.append((now, r))
-            self._reserve_last = r
-        self._reserve_now = r
+        self._reserve_now = self.sample_reserve(now)
         try:
             return self._schedule_locked(now, placed)
         finally:
@@ -799,6 +882,8 @@ class SchedulerState:
                 del self.resident[key]
             self.resident[(rng.start, rng.size)] = (req.module, fp)
             chunk = req.next_chunk()
+            self._pending_n -= 1
+            self._bump()
             frac, restore_ms = 1.0, 0.0
             if self.ckpt is not None:
                 rec = self.ckpt.take(req.rid, chunk)
@@ -843,4 +928,5 @@ class SchedulerState:
         if req.complete:
             req.t_finish = now
         self._pop_finished(req)
+        self._touch()
         return True

@@ -46,6 +46,12 @@ from repro.core.fabric import Fabric
 from repro.core.registry import Registry
 from repro.core.scheduler import Assignment, PolicyConfig
 
+# stale "done" events are lazily skipped on pop; once more than this
+# many are pending AND they outnumber live events 2:1, the heap is
+# compacted in one pass.  Module-level so tests can force compaction on
+# small traces (the rebuild must be event-order-identical)
+COMPACT_MIN_STALE = 64
+
 
 def p95(latencies: list[float]) -> float:
     """p95 over a list of latencies (nearest-rank); 0.0 when empty."""
@@ -221,12 +227,18 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
     # same chunk does not move the payload again
     paid_chunks: set[tuple[str, int, int]] = set()
     charged: dict[int, float] = {}      # aid -> transfer charged
+    # aids evicted before their "done" event fired: the event stays in
+    # the heap (lazy deletion) and is skipped on pop; when stale events
+    # come to dominate the heap it is compacted in one pass — a high
+    # preemption rate must not grow the heap without bound
+    stale: set[int] = set()
 
     def dispatch(t0: float):
         nonlocal seq, busy_time, wasted_time, reconfs
         nonlocal discarded_ms, reclaimed_ms
         new = fabric.schedule(now=t0)
         for shell, v in fabric.drain_preempted():
+            stale.add(v.aid)
             tr = charged.pop(v.aid, 0.0)
             ts = starts.pop(v.aid)
             span = (t0 - ts) * v.rng.size
@@ -254,6 +266,15 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
             preempted_spans.append(
                 (ts, t0, (offsets[shell] + v.rng.start, v.rng.size),
                  job.gid))
+        if len(stale) > COMPACT_MIN_STALE \
+                and 2 * len(stale) > len(events):
+            # compact: drop the stale "done" entries and re-heapify.
+            # (t, seq) is a unique total order, so rebuild pops the
+            # surviving events in exactly the original order
+            events[:] = [e for e in events
+                         if e[2] != "done" or e[3][1].aid not in stale]
+            heapq.heapify(events)
+            stale.clear()
         for shell, a in new:
             # stolen chunks also pay the priced cross-shell payload
             # movement — the latency the steal gate reasons about is
@@ -274,22 +295,41 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
             heapq.heappush(events, (t0 + dt, seq, "done", (shell, a)))
             seq += 1
 
+    def admit(j: SimJob, t: float) -> None:
+        job = fabric.submit(j.tenant, j.module, j.n_chunks,
+                            now=t, priority=j.priority,
+                            deadline_ms=j.deadline_ms,
+                            affinity=j.affinity)
+        meta[job.gid] = {"tenant": j.tenant,
+                         "priority": j.priority,
+                         "deadline_ms": j.deadline_ms,
+                         "n_chunks": j.n_chunks,
+                         "t_submit": t}
+
     while events:
         now, _, kind, obj = heapq.heappop(events)
         if kind == "arrive":
-            job = fabric.submit(obj.tenant, obj.module, obj.n_chunks,
-                                now=now, priority=obj.priority,
-                                deadline_ms=obj.deadline_ms,
-                                affinity=obj.affinity)
-            meta[job.gid] = {"tenant": obj.tenant,
-                             "priority": obj.priority,
-                             "deadline_ms": obj.deadline_ms,
-                             "n_chunks": obj.n_chunks,
-                             "t_submit": now}
+            admit(obj, now)
+            # coalesce a same-timestamp arrival storm into one
+            # scheduling pass: every job offered at this instant is
+            # admitted before placement runs.  Interleaving dispatch
+            # between same-t submits (the pre-PR 6 behavior) let the
+            # first job claim slots and bias steals before its
+            # simultaneous peers even existed — an ordering bug, since
+            # no event separates the arrivals.  Arrivals at equal t
+            # always pop before "done" events (their seq numbers are
+            # assigned first), so completions are unaffected.
+            while events and events[0][0] == now \
+                    and events[0][2] == "arrive":
+                admit(heapq.heappop(events)[3], now)
         else:
             shell, a = obj
+            if a.aid in stale:
+                stale.discard(a.aid)
+                continue                 # evicted: the executor-side skip
             if not fabric.complete(shell, a, now=now):
                 continue                 # stale event for a preempted chunk
+            paid_chunks.discard((shell, a.rid, a.chunk))
             ts = starts.pop(a.aid)
             busy_time += (now - ts) * a.rng.size
             busy_by_shell[shell] += (now - ts) * a.rng.size
@@ -328,6 +368,14 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
         assert not st.active, "simulator finished with in-flight chunks"
     assert fabric.ckpt is None or len(fabric.ckpt) == 0, \
         "simulator finished with unconsumed checkpoint records"
+    # bookkeeping must drain exactly: every dispatched aid was either
+    # completed or preempted (starts/charged), and every stale "done"
+    # event was skipped or compacted away.  (paid_chunks may retain an
+    # entry when a transfer-paid chunk is preempted and then re-stolen
+    # — it completes under a new sub-request identity — but completion
+    # releases the common case, so residue is bounded by re-steals.)
+    assert not starts and not charged and not stale, \
+        "simulator finished with leaked bookkeeping entries"
     lat = {j.gid: j.t_finish - j.t_submit for j in fabric.jobs.values()}
     util = busy_time / (now * total_slots) if now > 0 else 0.0
     n_pre = sum(st.n_preemptions for st in fabric.states.values())

@@ -1,0 +1,207 @@
+"""Golden trace corpus for the simulator core (PR 6).
+
+Seeded, feature-complete traces whose full `SimResult` dumps were
+captured from the *pre-refactor* per-event full-reschedule core and
+committed as fixtures (`tests/fixtures/sim_golden_*.json`).  The
+incremental event-heap core must reproduce every fixture byte for byte
+— same floats, same event order, same ids — which pins the whole
+scheduling contract (timeline, reserve_history, checkpoint counters,
+steal accounting) across the refactor, the same discipline PRs 3-5
+used for their contracts.
+
+Arrival times are strictly increasing with seeded exponential jitter:
+no two events share a timestamp, so the same-timestamp arrival
+coalescing fix (PR 6 satellite) is a no-op on every golden trace and
+the fixtures stay valid across it.  Same-t ordering itself is pinned
+separately by the regression tests in test_simulator_core.py.
+
+Regenerating (only when the contract changes *deliberately*):
+
+    PYTHONPATH=src python tests/golden_traces.py
+
+then review the fixture diff like any other contract change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import random
+
+from repro.core import Fabric, ImplAlt, ModuleDescriptor, PolicyConfig, \
+    Registry, SimJob, simulate, uniform_shell
+
+FIXTURE_DIR = pathlib.Path(__file__).parent / "fixtures"
+
+
+def build_registry() -> Registry:
+    """Modules exercising every cost-model path: a mis-estimated one
+    (true_chunk_ms != est) for refine mode, footprint alternatives for
+    replacement/upsizing, and a wide module that cannot fit small
+    shells (dispatch feasibility)."""
+    reg = Registry()
+    reg.register_module(ModuleDescriptor(
+        name="batch", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 40.0), ImplAlt("x2", 2, 22.0))))
+    reg.register_module(ModuleDescriptor(
+        name="inter", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 4.0), ImplAlt("x2", 2, 2.4))))
+    reg.register_module(ModuleDescriptor(
+        name="wide", entrypoint="x:y",
+        impls=(ImplAlt("x2", 2, 10.0),)))
+    reg.register_module(ModuleDescriptor(
+        name="skew", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 8.0, meta={"true_chunk_ms": 13.0}),
+               ImplAlt("x2", 2, 5.0, meta={"true_chunk_ms": 8.0}))))
+    return reg
+
+
+def _jittered_jobs(seed: int, n: int, mean_gap_ms: float,
+                   mix) -> list[SimJob]:
+    """`n` jobs with strictly increasing seeded arrival times.  `mix`
+    is a list of (tenant, module, chunks, priority, deadline, affinity)
+    templates cycled deterministically with a seeded shuffle."""
+    rng = random.Random(seed)
+    t = 0.0
+    jobs = []
+    for i in range(n):
+        t += rng.expovariate(1.0 / mean_gap_ms) + 1e-3
+        ten, mod, ch, pri, dl, aff = mix[rng.randrange(len(mix))]
+        jobs.append(SimJob(t, ten, mod, ch, priority=pri,
+                           deadline_ms=dl, affinity=aff))
+    return jobs
+
+
+# -- trace definitions --------------------------------------------------------
+# Each entry builds a *fresh* (registry, fabric, jobs) per call — a
+# Fabric is single-use, and the equivalence tests run each trace twice.
+
+def trace_hetero_steal_ckpt():
+    """Everything at once: 3 shells with unequal speeds, priced
+    transfer pairs, preemption, checkpointed migration, adaptive
+    reservation, locality, an affinity pin, and deadlines."""
+    reg = build_registry()
+    pol = PolicyConfig(preemptive=True, ckpt=True,
+                       reserve_mode="adaptive", reserve_slots_max=2,
+                       transfer_ms=1.5)
+    fab = Fabric({"big": (4, 1.0), "fast": (2, 2.0), "slow": (2, 0.5)},
+                 reg, pol,
+                 transfer={("big", "fast"): 0.5, ("slow", "big"): 3.0})
+    mix = [("acme", "batch", 6, 0, None, None),
+           ("acme", "batch", 4, 0, None, "big"),
+           ("beta", "inter", 2, 2, 30.0, None),
+           ("beta", "inter", 1, 3, 15.0, None),
+           ("gama", "wide", 3, 1, None, None),
+           ("gama", "batch", 5, 0, 400.0, None)]
+    return reg, fab, _jittered_jobs(601, 40, 9.0, mix)
+
+
+def trace_refine_hetero():
+    """Online cost-model refinement on a mis-estimated module across a
+    two-speed fabric: every completion moves the shared EWMA, so the
+    incremental core must invalidate cached backlogs fabric-wide."""
+    reg = build_registry()
+    pol = PolicyConfig(preemptive=True, refine_cost_model=True,
+                       transfer_ms=0.8)
+    fab = Fabric({"a": (4, 1.0), "b": (4, 1.6)}, reg, pol)
+    mix = [("u0", "skew", 5, 0, None, None),
+           ("u1", "skew", 3, 1, None, None),
+           ("u1", "inter", 2, 2, 40.0, None),
+           ("u2", "batch", 4, 0, None, None)]
+    return reg, fab, _jittered_jobs(602, 36, 11.0, mix)
+
+
+def trace_static_reserve_preempt():
+    """Homogeneous pair with a static reservation and heavy preemption
+    pressure — the reserve shrink-waiver and starvation-aging paths."""
+    reg = build_registry()
+    pol = PolicyConfig(preemptive=True, ckpt=True, reserve_slots=1,
+                       starvation_bound_ms=60.0)
+    fab = Fabric({"s0": 4, "s1": 4}, reg, pol)
+    mix = [("acme", "batch", 8, 0, None, None),
+           ("beta", "inter", 1, 2, 12.0, None),
+           ("beta", "inter", 2, 2, 25.0, None),
+           ("gama", "batch", 3, 0, None, None)]
+    return reg, fab, _jittered_jobs(603, 44, 6.0, mix)
+
+
+def trace_single_shell_seed():
+    """The degenerate seed form (bare slot count), preemptive — pins
+    the single-shell fast path the daemon also drives."""
+    reg = build_registry()
+    pol = PolicyConfig(preemptive=True)
+    mix = [("u0", "batch", 4, 0, None, None),
+           ("u1", "inter", 2, 2, 20.0, None),
+           ("u0", "wide", 2, 1, None, None)]
+    return reg, 4, _jittered_jobs(604, 24, 14.0, mix), pol
+
+
+def trace_ckpt_incapable_mix():
+    """A shell without context readback in a checkpointing fabric:
+    lossy eviction there, and migration onto it drops the record."""
+    reg = build_registry()
+    pol = PolicyConfig(preemptive=True, ckpt=True, transfer_ms=1.0,
+                       reserve_mode="adaptive", reserve_slots_max=1)
+    fab = Fabric({"cap": uniform_shell("cap", (2, 4), 4, speed=1.0),
+                  "raw": uniform_shell("raw", (2, 2), 2, speed=1.3,
+                                       ckpt=False)},
+                 reg, pol)
+    mix = [("acme", "batch", 7, 0, None, None),
+           ("beta", "inter", 1, 2, 18.0, None),
+           ("beta", "inter", 2, 3, 10.0, None),
+           ("gama", "batch", 4, 0, None, None)]
+    return reg, fab, _jittered_jobs(605, 38, 7.0, mix)
+
+
+TRACES = {
+    "hetero_steal_ckpt": trace_hetero_steal_ckpt,
+    "refine_hetero": trace_refine_hetero,
+    "static_reserve_preempt": trace_static_reserve_preempt,
+    "single_shell_seed": trace_single_shell_seed,
+    "ckpt_incapable_mix": trace_ckpt_incapable_mix,
+}
+
+
+def run_trace(name: str):
+    """Build the trace fresh and simulate it; returns the SimResult."""
+    built = TRACES[name]()
+    if len(built) == 4:                   # bare-slot-count seed form
+        reg, spec, jobs, pol = built
+        return simulate(reg, spec, jobs, pol)
+    reg, fab, jobs = built
+    return simulate(reg, fab, jobs)
+
+
+def to_jsonable(res) -> dict:
+    """Full SimResult as JSON-safe data.  Dict keys become strings and
+    tuples become lists (JSON has neither), so int-keyed maps are
+    dumped as sorted [key, value] pairs; floats survive a json
+    round-trip exactly (shortest-repr encoding), which is what makes
+    fixture comparison byte-for-byte on every metric."""
+    d = dataclasses.asdict(res)
+    d["request_latency"] = sorted(d["request_latency"].items())
+    d["request_meta"] = sorted(d["request_meta"].items())
+    return json.loads(json.dumps(d, sort_keys=True))
+
+
+def load_fixture(name: str) -> dict:
+    with open(FIXTURE_DIR / f"sim_golden_{name}.json") as f:
+        return json.load(f)
+
+
+def main() -> None:
+    FIXTURE_DIR.mkdir(exist_ok=True)
+    for name in TRACES:
+        res = run_trace(name)
+        path = FIXTURE_DIR / f"sim_golden_{name}.json"
+        with open(path, "w") as f:
+            json.dump(to_jsonable(res), f, sort_keys=True, indent=1)
+            f.write("\n")
+        print(f"{path}: makespan={res.makespan:.3f} "
+              f"preemptions={res.preemptions} stolen={res.stolen_chunks} "
+              f"saves={res.ckpt_saves} restores={res.ckpt_restores} "
+              f"migrations={res.ckpt_migrations}")
+
+
+if __name__ == "__main__":
+    main()

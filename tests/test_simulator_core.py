@@ -1,0 +1,314 @@
+"""PR 6: the incremental event-heap simulator core.
+
+Four pillars, mirroring the refactor's risk surface:
+
+1. **Golden byte-identity** — every committed fixture
+   (tests/fixtures/sim_golden_*.json, captured from the pre-refactor
+   full-reschedule core) must be reproduced byte for byte by the
+   current core.  This pins the entire `SimResult` contract: timeline,
+   reserve_history, checkpoint counters, steal accounting, float for
+   float.
+
+2. **Old-vs-new equivalence** — `Fabric.full_reschedule = True`
+   restores the pre-PR 6 control flow (every shell reschedules on
+   every pass).  Random feature-mixed traces must produce identical
+   results in both modes: the dirty-shell set is a pure control-flow
+   elision.
+
+3. **Same-timestamp arrival coalescing** — the one deliberate behavior
+   change.  All jobs arriving at the same instant are admitted before
+   placement runs; previously the first same-t job could upsize into
+   capacity its simultaneous peers needed (an ordering bug — no event
+   separates the arrivals).
+
+4. **Bookkeeping under preempt+steal+ckpt interleavings** — the O(1)
+   pending counter must track its defining recomputation through every
+   mutation path, the allocator bitmask must mirror the busy set, and
+   the stale-event heap compaction must be event-order-invisible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from golden_traces import TRACES, build_registry, load_fixture, \
+    run_trace, to_jsonable
+from repro.core import Fabric, ImplAlt, ModuleDescriptor, PolicyConfig, \
+    Registry, SimJob, simulate
+import repro.core.simulator as simulator_mod
+
+
+# -- 1. golden byte-identity --------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TRACES))
+def test_golden_trace_byte_identity(name):
+    """The incremental core reproduces the pre-refactor fixture dump
+    exactly — every float, every event, every counter."""
+    assert to_jsonable(run_trace(name)) == load_fixture(name)
+
+
+def test_golden_traces_have_feature_coverage():
+    """The corpus would silently stop pinning what it claims to pin if
+    a trace drifted below its feature thresholds."""
+    res = {name: run_trace(name) for name in TRACES}
+    assert res["hetero_steal_ckpt"].stolen_chunks > 0
+    assert res["hetero_steal_ckpt"].ckpt_restores > 0
+    assert res["hetero_steal_ckpt"].preemptions > 0
+    assert any(res["hetero_steal_ckpt"].reserve_history.values())
+    assert res["refine_hetero"].preemptions > 0
+    assert res["static_reserve_preempt"].preemptions > 10
+    assert res["ckpt_incapable_mix"].discarded_ms > 0
+    assert res["single_shell_seed"].preemptions > 0
+
+
+# -- 2. old-vs-new equivalence ------------------------------------------------
+
+def _rand_trace(seed: int, n_jobs: int) -> list[SimJob]:
+    rng = random.Random(seed)
+    jobs, t = [], 0.0
+    for _ in range(n_jobs):
+        t += rng.expovariate(0.25) + 1e-3
+        u = rng.random()
+        if u < 0.45:
+            jobs.append(SimJob(t, f"t{rng.randrange(4)}", "batch",
+                               rng.randint(2, 6)))
+        elif u < 0.8:
+            jobs.append(SimJob(t, f"t{rng.randrange(4)}", "inter",
+                               rng.randint(1, 3), priority=2,
+                               deadline_ms=25.0))
+        else:
+            jobs.append(SimJob(t, f"t{rng.randrange(4)}", "wide",
+                               rng.randint(1, 4), priority=1))
+    return jobs
+
+
+def _run_both(shells, jobs, pol, transfer=None):
+    """The same trace through the incremental and the full-reschedule
+    core; returns both canonicalized result dumps."""
+    out = []
+    for full in (False, True):
+        reg = build_registry()
+        fab = Fabric(dict(shells), reg, pol, transfer=transfer)
+        fab.full_reschedule = full
+        out.append(to_jsonable(simulate(reg, fab, jobs)))
+    return out
+
+
+@given(st.integers(0, 10**6), st.integers(8, 22), st.booleans(),
+       st.booleans(), st.sampled_from(["static", "adaptive"]))
+@settings(max_examples=25, deadline=None)
+def test_incremental_equals_full_reschedule(seed, n_jobs, ckpt, steal,
+                                            mode):
+    """Property: on random feature-mixed heterogeneous traces the
+    dirty-shell core and the everything-every-pass core are
+    byte-identical."""
+    pol = PolicyConfig(preemptive=True, ckpt=ckpt, steal=steal,
+                       reserve_mode=mode, reserve_slots_max=2,
+                       reserve_slots=1 if mode == "static" else 0,
+                       transfer_ms=0.7, starvation_bound_ms=50.0)
+    inc, full = _run_both({"a": (4, 1.0), "b": (2, 1.7), "c": (2, 0.6)},
+                          _rand_trace(seed, n_jobs), pol)
+    assert inc == full
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_equivalence_with_refinement(seed):
+    """Cost-model refinement moves the shared EWMA on every completion;
+    the incremental core must invalidate every shell's cached backlog
+    (and steal-gate cache) when it does."""
+    pol = PolicyConfig(preemptive=True, refine_cost_model=True,
+                       transfer_ms=0.5)
+    jobs = [SimJob(3.0 * i + (i % 3) * 0.1, f"t{i % 3}",
+                   "skew" if i % 2 else "batch", 2 + i % 4)
+            for i in range(14)]
+    inc, full = _run_both({"a": (4, 1.0), "b": (4, 1.5)},
+                          _rand_trace(seed, 6) + jobs, pol)
+    assert inc == full
+
+
+# -- 3. same-timestamp arrival coalescing -------------------------------------
+
+def _one_module_registry() -> Registry:
+    reg = Registry()
+    reg.register_module(ModuleDescriptor(
+        name="m", entrypoint="x:y",
+        impls=(ImplAlt("f1", 1, 10.0), ImplAlt("f2", 2, 6.0))))
+    return reg
+
+
+def test_same_t_arrivals_admitted_before_placement():
+    """Two jobs arriving at the same instant on a 2-slot shell both get
+    a 1-slot implementation and run concurrently.  The pre-PR 6 core
+    dispatched between the two same-t admissions, so the first job
+    upsized to the full shell and its simultaneous peer queued behind
+    it — an ordering bug: no event separates the arrivals."""
+    reg = _one_module_registry()
+    res = simulate(reg, 2, [SimJob(0.0, "a", "m", 1),
+                            SimJob(0.0, "b", "m", 1)], PolicyConfig())
+    spans = sorted(res.timeline, key=lambda e: e[2])
+    assert len(spans) == 2
+    # both start at t=0 in side-by-side 1-slot ranges
+    assert [s[2] for s in spans] == [(0, 1), (1, 1)]
+    assert all(s[0] == 0.0 for s in spans)
+    assert res.makespan == spans[0][1] == spans[1][1]
+
+
+def test_interleaved_admission_differs_from_coalesced():
+    """Documents the bug the coalescing fixes: replaying the same two
+    same-t submits with a dispatch in between (the old control flow)
+    upsizes the first job onto both slots and starves its peer."""
+    reg = _one_module_registry()
+    fab = Fabric({"shell0": 2}, reg, PolicyConfig())
+    fab.submit("a", "m", 1, now=0.0)
+    first = fab.schedule(now=0.0)
+    fab.submit("b", "m", 1, now=0.0)
+    second = fab.schedule(now=0.0)
+    assert [(a.footprint, a.rng.size) for _, a in first] == [(2, 2)]
+    assert second == []                  # peer starved until a slot frees
+
+
+def test_same_t_burst_equivalence_across_cores():
+    """Coalescing happens in the simulator loop, upstream of the
+    fabric — both scheduling cores see the identical admission batches,
+    so same-t bursts stay byte-identical between them."""
+    jobs = []
+    for k in range(6):
+        jobs += [SimJob(10.0 * k, f"t{i}", "inter", 1 + (k + i) % 3,
+                        priority=2) for i in range(3)]
+        jobs.append(SimJob(10.0 * k, "bb", "batch", 4))
+    pol = PolicyConfig(preemptive=True, ckpt=True, transfer_ms=0.5)
+    inc, full = _run_both({"a": (2, 1.0), "b": (2, 1.4)}, jobs, pol)
+    assert inc == full
+
+
+def test_arrivals_pop_before_dones_at_equal_t():
+    """A job arriving exactly when the running chunk completes is
+    admitted first (arrival seqs are assigned before any done event
+    exists), so the completion's scheduling pass already sees it."""
+    reg = _one_module_registry()
+    # chunk time 10 + reconfig 5 = first completion at t=15.0 exactly
+    res = simulate(reg, 1, [SimJob(0.0, "a", "m", 1),
+                            SimJob(15.0, "b", "m", 1)], PolicyConfig())
+    spans = sorted(res.timeline)
+    assert spans[0][1] == 15.0
+    # b starts at the completion instant, not one event later
+    assert spans[1][0] == 15.0
+
+
+# -- 4. bookkeeping under interleavings ---------------------------------------
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_pending_counter_and_mask_track_slow_recompute(seed):
+    """Drive a fabric through random submit/schedule/complete/abort
+    interleavings (with preemption, stealing and checkpointing live)
+    and cross-check, after every operation, the O(1) structures
+    against their defining recomputations: `pending_chunks()` vs the
+    queue scan, and the allocator bitmask vs the busy set."""
+    rng = random.Random(seed)
+    reg = build_registry()
+    pol = PolicyConfig(preemptive=True, ckpt=True, steal=True,
+                       transfer_ms=0.4, starvation_bound_ms=40.0)
+    fab = Fabric({"a": (2, 1.0), "b": (2, 1.5)}, reg, pol)
+    t = 0.0
+    active = []
+    gids = []
+
+    def check():
+        for st_ in fab.states.values():
+            assert st_.pending_chunks() == st_._pending_chunks_slow()
+            assert st_.pending_chunks() >= 0
+            assert st_.alloc._mask == sum(1 << i for i in st_.alloc.busy)
+
+    for _ in range(60):
+        t += rng.uniform(0.1, 6.0)
+        u = rng.random()
+        if u < 0.45:
+            mod = rng.choice(["batch", "inter", "wide"])
+            pri = 2 if mod == "inter" else 0
+            job = fab.submit(f"t{rng.randrange(3)}", mod,
+                             rng.randint(1, 4), now=t, priority=pri)
+            gids.append(job.gid)
+        elif u < 0.75 and active:
+            shell, a = active.pop(rng.randrange(len(active)))
+            fab.complete(shell, a, now=t)   # False for stale: fine
+        elif gids:
+            gid = rng.choice(gids)          # repeats exercise the
+            fab.abort(gid)                  # repeat-abort no-op guard
+        check()
+        active.extend(fab.schedule(now=t))
+        fab.drain_preempted()
+        check()
+    # drain: complete everything still in flight
+    while active:
+        t += 1.0
+        shell, a = active.pop()
+        fab.complete(shell, a, now=t)
+        active.extend(fab.schedule(now=t))
+        fab.drain_preempted()
+        check()
+
+
+@given(st.integers(0, 10**6), st.integers(10, 18))
+@settings(max_examples=15, deadline=None)
+def test_heap_compaction_is_invisible(seed, n_jobs):
+    """Force compaction on every preemption (threshold 0) on a
+    preemption-heavy trace: the rebuilt heap must pop the surviving
+    events in exactly the original order, so the run is byte-identical
+    to the lazy-deletion run."""
+    pol = PolicyConfig(preemptive=True, ckpt=True, transfer_ms=0.5)
+    jobs = _rand_trace(seed, n_jobs)
+    reg = build_registry()
+    baseline = to_jsonable(simulate(
+        reg, Fabric({"a": (2, 1.0), "b": (2, 0.8)}, reg, pol), jobs))
+    orig = simulator_mod.COMPACT_MIN_STALE
+    simulator_mod.COMPACT_MIN_STALE = 0
+    try:
+        reg2 = build_registry()
+        forced = to_jsonable(simulate(
+            reg2, Fabric({"a": (2, 1.0), "b": (2, 0.8)}, reg2, pol),
+            jobs))
+    finally:
+        simulator_mod.COMPACT_MIN_STALE = orig
+    assert forced == baseline
+
+
+def test_bookkeeping_drains_on_preemption_storm():
+    """A hi-prio stream that evicts nearly every batch chunk: the
+    simulator's own end-of-run asserts (busy slots, in-flight chunks,
+    checkpoint records, starts/charged/stale) are the oracle; the
+    result must also be mode-independent."""
+    jobs = [SimJob(0.0, "heavy", "batch", 10),
+            SimJob(0.5, "heavy2", "batch", 8)]
+    jobs += [SimJob(4.0 + 7.0 * i, "live", "inter", 1, priority=4)
+             for i in range(12)]
+    pol = PolicyConfig(preemptive=True, ckpt=True, steal=True,
+                       transfer_ms=0.3)
+    inc, full = _run_both({"a": (2, 1.0), "b": (2, 1.2)}, jobs, pol)
+    assert inc == full
+    reg = build_registry()
+    res = simulate(reg, Fabric({"a": (2, 1.0), "b": (2, 1.2)},
+                               reg, pol), jobs)
+    assert res.preemptions > 0 and res.ckpt_restores > 0
+
+
+def test_abort_is_idempotent_on_pending_counter():
+    """Repeat aborts of the same request must not double-subtract the
+    pending count (the bug class the `req.failed` guard closes)."""
+    from repro.core.scheduler import SchedulerState
+    st_ = SchedulerState(4, build_registry(), PolicyConfig())
+    r1 = st_.submit("t0", "batch", 3, now=0.0)
+    r2 = st_.submit("t1", "batch", 2, now=0.0)
+    assert st_.pending_chunks() == st_._pending_chunks_slow() == 5
+    st_.abort(r1.rid)
+    assert st_.pending_chunks() == st_._pending_chunks_slow() == 2
+    st_.abort(r1.rid)                     # repeat: must be a no-op
+    st_.abort(r1.rid)
+    assert st_.pending_chunks() == st_._pending_chunks_slow() == 2
+    st_.abort(r2.rid)
+    assert st_.pending_chunks() == st_._pending_chunks_slow() == 0
