@@ -1,0 +1,206 @@
+"""SLO admission control under overload: contract p95 vs naive sharing.
+
+PR 7 added per-tenant QoS contracts (`QoSContract`) and a predictive
+`AdmissionController` that screens every `Fabric.submit` against the
+registered contracts: a submit whose predicted completion would push any
+contract past its deadline percentile is REJECTED (or transparently
+DEGRADEd when the contract names a cheaper implementation).  The point
+of admission control is what happens under *overload*: without it,
+excess batch work queues in front of everyone and the latency-sensitive
+tenant's tail grows without bound; with it, the controller sheds exactly
+the work that would breach the contract, so the contract tenant's p95
+stays pinned near its uncontended value no matter how much load is
+offered.
+
+This benchmark sweeps offered load from 0.5x to 3x fabric capacity.
+At each point the same seeded trace — one contract tenant ("svc", a
+steady interactive stream) plus background batch tenants sized to the
+overload factor — runs twice through identical fabrics:
+
+  - **admission**: svc's `QoSContract` is registered; the controller
+    screens every submit (svc's own and the background tenants').
+  - **naive**: no contract; every job is admitted FIFO into the same
+    elastic scheduler.
+
+The figure of merit is svc's p95 latency over its *admitted* jobs,
+normalised to the uncontended (0.5x, admission) p95.
+
+Acceptance (CI runs `--quick`): at 2x overload the admitted-contract
+p95 must stay within **1.3x** of uncontended while the naive p95
+exceeds **3x** — i.e. the controller is doing real work exactly where
+fair sharing collapses.
+
+Writes `BENCH_7.json` (per-factor p95/shed-rate both modes, gate
+verdict) unless `--out ''`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import sys
+from pathlib import Path
+
+from benchmarks.common import row
+from repro.core import Fabric, ImplAlt, ModuleDescriptor, PolicyConfig, \
+    QoSContract, Registry, SimJob, simulate
+
+FACTORS = (0.5, 1.0, 1.5, 2.0, 2.5, 3.0)
+GATE_FACTOR = 2.0         # the overload point the acceptance gate reads
+GATE_ADMIT = 1.3          # admitted p95 must stay within this x uncontended
+GATE_NAIVE = 3.0          # ...while naive p95 exceeds this x uncontended
+
+SVC_GAP_MS = 10.0         # svc inter-arrival (rate 100/s)
+SVC_SERVICE = 4.0         # svc per-chunk estimate at footprint 1
+BG_CHUNKS = 4             # background batch chunks per job
+BG_SERVICE = 40.0         # background per-chunk estimate at footprint 1
+
+
+def _registry() -> Registry:
+    reg = Registry()
+    reg.register_module(ModuleDescriptor(
+        name="batch", entrypoint="x:y",
+        impls=(ImplAlt("b1", 1, BG_SERVICE), ImplAlt("b2", 2, 22.0))))
+    reg.register_module(ModuleDescriptor(
+        name="inter", entrypoint="x:y",
+        impls=(ImplAlt("i1", 1, SVC_SERVICE),)))
+    return reg
+
+
+def _fabric(reg: Registry) -> tuple[Fabric, float]:
+    """Two-shell fabric; returns it with its capacity in slot-ms/ms."""
+    pol = PolicyConfig(preemptive=True, transfer_ms=1.0)
+    shells = {"s0": (4, 1.0), "s1": (4, 1.0)}
+    cap = sum(n * speed for n, speed in shells.values())
+    return Fabric(shells, reg, pol), cap
+
+
+def overload_trace(factor: float, horizon_ms: float,
+                   seed: int) -> list[SimJob]:
+    """svc's steady interactive stream plus background batch tenants
+    whose offered slot-ms/ms tops total load up to `factor` x capacity.
+    Arrival gaps are seeded-exponential and strictly increasing."""
+    _, cap = _fabric(_registry())
+    svc_load = SVC_SERVICE / SVC_GAP_MS
+    bg_load = max(0.0, factor * cap - svc_load)
+    bg_gap = (BG_CHUNKS * BG_SERVICE) / bg_load if bg_load else None
+    rng = random.Random(seed)
+    jobs = []
+    t = 0.0
+    while t < horizon_ms:
+        t += rng.expovariate(1.0 / SVC_GAP_MS) + 1e-3
+        jobs.append(SimJob(t, "svc", "inter", 1, priority=3))
+    if bg_gap is not None:
+        t = 0.0
+        i = 0
+        while t < horizon_ms:
+            t += rng.expovariate(1.0 / bg_gap) + 1e-3
+            jobs.append(SimJob(t, f"bg{i % 3}", "batch", BG_CHUNKS))
+            i += 1
+    jobs.sort(key=lambda j: j.t_arrive)
+    # strictly increasing timestamps (merge of two streams can collide)
+    last = -1.0
+    fixed = []
+    for j in jobs:
+        t = j.t_arrive if j.t_arrive > last else last + 1e-3
+        fixed.append(SimJob(t, j.tenant, j.module, j.n_chunks,
+                            priority=j.priority))
+        last = t
+    return fixed
+
+
+def _p95(xs: list[float]) -> float:
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(0.95 * len(xs)))] if xs else 0.0
+
+
+def run_point(factor: float, horizon_ms: float, seed: int,
+              admission: bool) -> dict:
+    """One sweep point; returns svc p95 over admitted jobs + shed rate."""
+    reg = _registry()
+    fab, _ = _fabric(reg)
+    if admission:
+        fab.register_contract(QoSContract(
+            "svc", rate_per_s=1000.0 / SVC_GAP_MS, deadline_ms=60.0))
+    jobs = overload_trace(factor, horizon_ms, seed)
+    res = simulate(reg, fab, jobs)
+    svc_lat = [lat for rid, lat in res.request_latency.items()
+               if fab.jobs[rid].tenant == "svc"]
+    n_svc = sum(1 for j in fab.jobs.values() if j.tenant == "svc")
+    rejected = sum(1 for j in fab.jobs.values() if j.rejected)
+    return {"factor": factor, "admission": admission,
+            "svc_p95_ms": round(_p95(svc_lat), 3),
+            "svc_admitted": len(svc_lat), "svc_offered": n_svc,
+            "rejected_jobs": rejected, "n_jobs": len(jobs),
+            "makespan_ms": round(res.makespan, 3)}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter horizon for CI smoke (gate still on)")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; skip the acceptance exit")
+    ap.add_argument("--out", default="BENCH_7.json",
+                    help="result JSON path ('' disables)")
+    args = ap.parse_args(argv)
+
+    horizon = 3000.0 if args.quick else 12000.0
+    sweep = []
+    for f in FACTORS:
+        adm = run_point(f, horizon, seed=11, admission=True)
+        nai = run_point(f, horizon, seed=11, admission=False)
+        sweep.append({"factor": f, "admission": adm, "naive": nai})
+
+    base = sweep[0]["admission"]["svc_p95_ms"]   # uncontended reference
+    for pt in sweep:
+        a, n = pt["admission"], pt["naive"]
+        row(f"admission/x{pt['factor']:g}/svc_p95_ms", a["svc_p95_ms"],
+            f"admitted_p95={a['svc_p95_ms']}ms "
+            f"({a['svc_p95_ms'] / base:.2f}x uncontended) "
+            f"naive_p95={n['svc_p95_ms']}ms "
+            f"({n['svc_p95_ms'] / base:.2f}x) "
+            f"shed={a['rejected_jobs']}/{a['n_jobs']}")
+
+    gate_pt = next(p for p in sweep if p["factor"] == GATE_FACTOR)
+    adm_x = gate_pt["admission"]["svc_p95_ms"] / base
+    nai_x = gate_pt["naive"]["svc_p95_ms"] / base
+    ok = adm_x <= GATE_ADMIT and nai_x > GATE_NAIVE
+    row("admission/gate", 0.0,
+        f"at {GATE_FACTOR:g}x overload: admitted {adm_x:.2f}x uncontended"
+        f" (bound <={GATE_ADMIT}x), naive {nai_x:.2f}x "
+        f"(bound >{GATE_NAIVE:g}x) -> {'PASS' if ok else 'FAIL'}")
+
+    if args.out:
+        Path(args.out).write_text(json.dumps({
+            "bench": "admission",
+            "trace": {"svc_gap_ms": SVC_GAP_MS,
+                      "svc_service_ms": SVC_SERVICE,
+                      "bg_chunks": BG_CHUNKS,
+                      "bg_service_ms": BG_SERVICE,
+                      "horizon_ms": horizon, "seed": 11,
+                      "quick": args.quick},
+            "contract": {"tenant": "svc",
+                         "rate_per_s": 1000.0 / SVC_GAP_MS,
+                         "deadline_ms": 60.0, "percentile": 0.95},
+            "sweep": sweep,
+            "uncontended_p95_ms": base,
+            "gate": {"factor": GATE_FACTOR,
+                     "admitted_bound_x": GATE_ADMIT,
+                     "naive_bound_x": GATE_NAIVE,
+                     "admitted_x": round(adm_x, 3),
+                     "naive_x": round(nai_x, 3),
+                     "pass": ok},
+        }, indent=2) + "\n")
+
+    if not args.no_gate and not ok:
+        print(f"FAIL: at {GATE_FACTOR:g}x overload admitted-contract "
+              f"p95 is {adm_x:.2f}x uncontended (bound "
+              f"<={GATE_ADMIT}x) and naive is {nai_x:.2f}x (bound "
+              f">{GATE_NAIVE:g}x)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,7 +35,8 @@ sys.path.insert(0, "src")
 import jax                                                    # noqa: E402
 import numpy as np                                            # noqa: E402
 
-from repro.core import Daemon, FabricDescriptor, PolicyConfig, Shell, \
+from repro.core import Daemon, FabricDescriptor, ImplAlt, \
+    ModuleDescriptor, PolicyConfig, QoSContract, Shell, \
     default_registry, uniform_shell                           # noqa: E402
 
 
@@ -119,6 +120,33 @@ def main():
           f"restores={c.get('restores', 0)} "
           f"migrations={c.get('migrations', 0)} "
           f"dropped={c.get('dropped', 0)}")
+
+    # erin arrives late with a *QoS contract* (PR 7): 20 req/s at a
+    # 35 ms p95 deadline, with "sobel-lite" (the same kernel declared
+    # at a cheaper estimate) as her degraded tier.  Even on the now-
+    # drained fabric the full sobel estimate is predicted infeasible at
+    # that deadline, so the admission controller transparently DEGRADEs
+    # her submit — the verdict and the per-tenant attainment ledger are
+    # printed below.
+    reg.register_module(ModuleDescriptor(
+        name="sobel-lite", entrypoint="repro.core.zoo:build_sobel",
+        impls=(ImplAlt("x1", 1, 2.0),), kind="fn"))
+    daemon.register_contract(QoSContract(
+        "erin", rate_per_s=20.0, deadline_ms=35.0,
+        degraded="sobel-lite"))
+    h_erin = daemon.submit("erin", "sobel", [(img,)], priority=4)
+    v = daemon.fabric.jobs[h_erin.rid].verdict
+    print(f"erin/sobel admission: {v.action}"
+          + (f" -> {v.degraded_to!r} ({v.reason})"
+             if v.action == "DEGRADE" else ""))
+    h_erin.future.result(timeout=600)
+    e = daemon.slo_stats.get("erin", {})
+    att = e.get("attainment")
+    print(f"slo  : erin submitted={e.get('submitted', 0)} "
+          f"admitted={e.get('admitted', 0)} "
+          f"degraded={e.get('degraded', 0)} "
+          f"rejected={e.get('rejected', 0)} attainment="
+          f"{att if att is None else format(att, '.2f')}")
     daemon.shutdown()
 
 

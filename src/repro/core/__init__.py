@@ -7,6 +7,7 @@
 - bus.py        layout adaptors (bus virtualisation analogue)
 - scheduler.py  resource-elastic space-time policy (replicate/replace/reuse)
 - arrivals.py   online arrival-rate estimation (predictive reservation)
+- slo.py        per-tenant QoS contracts + predictive admission control
 - checkpoint.py context save/restore for preempted chunks (priced, migratable)
 - fabric.py     one scheduling contract over many shells (locality + stealing)
 - simulator.py  discrete-event execution of the policy (tests + Fig 15)
@@ -24,6 +25,8 @@ from repro.core.scheduler import Assignment, CostModel, PolicyConfig, \
     Request, SchedulerState
 from repro.core.shell import Shell, ShellSpec, SlotSpec, uniform_shell
 from repro.core.simulator import SimJob, SimResult, simulate
+from repro.core.slo import ADMIT, AdmissionController, \
+    AdmissionRejected, AdmissionVerdict, DEGRADE, QoSContract, REJECT
 
 
 def default_registry() -> Registry:

@@ -87,7 +87,7 @@ class ArrivalEstimator:
         # only moves when the clock or an observation does
         self._version = 0
         self._demand_at: tuple[float, int] | None = None
-        self._demand: dict[tuple[int, float, float], float] = {}
+        self._demand: dict[tuple[int, float, float, int], float] = {}
 
     def observe(self, priority: int, now: float,
                 service_ms: float = 0.0, footprint: int = 1) -> None:
@@ -140,7 +140,7 @@ class ArrivalEstimator:
 
     def demand_slots(self, min_priority: int, now: float,
                      overhead_ms: float = 0.0,
-                     speed: float = 1.0) -> float:
+                     speed: float = 1.0, min_obs: int = 0) -> float:
         """Little's-law slot concurrency of classes >= `min_priority`:
         sum of rate x ((blocking + service) / speed + overhead) x
         footprint — each predicted arrival occupies provisioned
@@ -149,20 +149,29 @@ class ArrivalEstimator:
         The caller passes the shell's reconfiguration penalty as
         `overhead_ms` and its decision speed.
 
+        `min_obs` excludes classes with fewer arrivals: an EWMA seeded
+        by one back-to-back pair (wall-clock submits land microseconds
+        apart) reads as an absurd sustained rate, and callers whose
+        query treats the result as steady-state load (the admission
+        controller's utilisation check) need a few inter-arrival
+        samples of evidence first.  The reservation path keeps the
+        default 0 — over-reserving for one burst is self-correcting,
+        turning away tenants is not.
+
         Memoized per (now, observation version): one computation serves
         every same-instant query (per-shell reservation sampling,
         dispatch ECT, steal sizing), returning the identical floats."""
         if self._demand_at != (now, self._version):
             self._demand_at = (now, self._version)
             self._demand = {}
-        key = (min_priority, overhead_ms, speed)
+        key = (min_priority, overhead_ms, speed, min_obs)
         hit = self._demand.get(key)
         if hit is not None:
             return hit
         blocking = self.blocking_ms(min_priority)
         total = 0.0
         for p, c in self._classes.items():
-            if p < min_priority:
+            if p < min_priority or c.n < min_obs:
                 continue
             rate = self.rate_per_ms(p, now)
             if rate <= 0.0:

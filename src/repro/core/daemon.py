@@ -50,6 +50,7 @@ from repro.core.module import AccelModule, Placement, run_placement
 from repro.core.registry import Registry
 from repro.core.scheduler import Assignment, PolicyConfig, SchedulerState
 from repro.core.shell import Shell
+from repro.core.slo import AdmissionRejected, QoSContract
 
 
 def _now_ms() -> float:
@@ -119,6 +120,22 @@ class Daemon:
             if self.fabric.ckpt is not None else {}
 
     @property
+    def slo_stats(self) -> dict:
+        """Per-tenant SLO attainment snapshot (verdict counts,
+        deadline-hit fraction, attainment history) once any
+        `QoSContract` is registered; `{}` otherwise."""
+        with self._lock:
+            return self.fabric.slo.attainment() \
+                if self.fabric.slo is not None else {}
+
+    def register_contract(self, contract: QoSContract) -> None:
+        """Attach a tenant's `QoSContract` to the fabric; every
+        subsequent `submit` is screened by admission control.  Unknown
+        degraded-module names raise the registry's rich KeyError."""
+        with self._lock:
+            self.fabric.register_contract(contract, now=_now_ms())
+
+    @property
     def reserve_history(self) -> dict[str, list]:
         """Per-shell effective-reservation trace `[(t_ms, slots), ...]`
         recorded on change — the adaptive reservation's sizing decisions
@@ -139,12 +156,19 @@ class Daemon:
             handles.append(self.submit(tenant, j["name"], j["chunks"],
                                        priority=j.get("priority", 0),
                                        deadline_ms=j.get("deadline_ms"),
-                                       affinity=j.get("affinity")))
+                                       affinity=j.get("affinity"),
+                                       contract=j.get("contract")))
         return handles
 
     def submit(self, tenant: str, module: str, chunks: list,
                priority: int = 0, deadline_ms: float | None = None,
-               affinity: str | None = None) -> JobHandle:
+               affinity: str | None = None,
+               contract: QoSContract | None = None) -> JobHandle:
+        """Submit one job.  `contract` registers (or refreshes) the
+        tenant's `QoSContract` before admission screening; when the
+        fabric carries any contract, a rejected submit still returns a
+        handle, but its future fails with `AdmissionRejected` carrying
+        the structured verdict (the predicted contract violation)."""
         fut: Future = Future()
         with self._lock:
             now = _now_ms()
@@ -153,10 +177,16 @@ class Daemon:
             job = self.fabric.submit(tenant, module, chunks,
                                      now=now, priority=priority,
                                      deadline_ms=deadline_ms,
-                                     affinity=affinity)
-            self._results[job.gid] = [None] * job.n_chunks
+                                     affinity=affinity,
+                                     contract=contract)
             h = JobHandle(job.gid, fut, now,
                           priority=priority, deadline_ms=deadline_ms)
+            if job.rejected:
+                # shed at admission: no chunks, no results buffer, no
+                # registered handle — only the failed future remains
+                fut.set_exception(AdmissionRejected(job.verdict))
+                return h
+            self._results[job.gid] = [None] * job.n_chunks
             self._handles[job.gid] = h
         self._events.put(("submit", None))
         return h
@@ -218,6 +248,11 @@ class Daemon:
             with self._lock:
                 t0 = time.perf_counter_ns()
                 assignments = self.fabric.schedule(now=_now_ms())
+                # the daemon keys no per-chunk executor state to stolen
+                # identities (payloads move by reference); drain the
+                # retirement log so it cannot grow for a long-lived
+                # daemon under heavy stealing
+                self.fabric.drain_moved()
                 self._handle_preempted_locked()
                 self.stats["sched_ns"] += time.perf_counter_ns() - t0
                 self.stats["sched_calls"] += 1

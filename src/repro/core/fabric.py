@@ -69,6 +69,8 @@ from repro.core.checkpoint import CheckpointManager
 from repro.core.registry import parse_transfer_pair
 from repro.core.scheduler import Assignment, CostModel, PolicyConfig, \
     SchedulerState
+from repro.core.slo import AdmissionController, AdmissionVerdict, \
+    DEGRADE, QoSContract, REJECT
 
 
 @dataclasses.dataclass(eq=False)
@@ -95,6 +97,10 @@ class FabricJob:
     failed: bool = False
     # (shell_name, rid) of every sub-request carrying this job's chunks
     subs: list = dataclasses.field(default_factory=list)
+    # -- SLO admission (core/slo.py); all None/False without contracts --
+    verdict: AdmissionVerdict | None = None
+    degraded_from: str | None = None     # offered module a DEGRADE swapped
+    rejected: bool = False               # shed at admission: never runs
 
     @property
     def complete(self) -> bool:
@@ -187,12 +193,21 @@ class Fabric:
         for key, ms in (transfer or {}).items():
             pair = parse_transfer_pair(key, self.states)
             self._transfer[pair] = float(ms)
+        # SLO admission control: constructed lazily by the first
+        # register_contract — a fabric with no contract never screens,
+        # so the no-contract path stays byte-identical (core/slo.py)
+        self.slo: AdmissionController | None = None
         self.jobs: dict[int, FabricJob] = {}
         # (shell_name, rid) -> (job, {local chunk id -> global chunk id})
         self._subs: dict[tuple[str, int], tuple[FabricJob, dict]] = {}
         # (shell_name, rid) -> transfer cost per chunk of a stolen
         # sub-request; the simulator realizes it in the chunk's time
         self._sub_transfer: dict[tuple[str, int], float] = {}
+        # (shell, rid, chunk) identities retired by steals since the
+        # last drain_moved(): the chunk now lives under a thief
+        # sub-request, so executor bookkeeping keyed to the old identity
+        # (the simulator's per-chunk transfer charges) must be released
+        self._moved: list[tuple[str, int, int]] = []
         self._admission: deque[FabricJob] = deque()
         self._now = 0.0
         self.stats = {"dispatched": 0, "local_dispatch": 0,
@@ -266,9 +281,10 @@ class Fabric:
         return self._sub_transfer.get((shell, rid), 0.0)
 
     def finished(self, gid: int) -> bool:
-        """Complete, or failed with no chunk still in flight anywhere."""
+        """Complete, rejected at admission, or failed with no chunk
+        still in flight anywhere."""
         job = self.jobs[gid]
-        if job.complete:
+        if job.rejected or job.complete:
             return True
         if not job.failed:
             return False
@@ -365,14 +381,73 @@ class Fabric:
 
     # -- submission -----------------------------------------------------------
 
+    def register_contract(self, contract: QoSContract,
+                          now: float | None = None) -> None:
+        """Attach (or replace) a tenant's `QoSContract`.  The first
+        registration constructs the `AdmissionController`; from then on
+        every `submit` is screened against all registered contracts.
+        The contract's degraded module name is validated against the
+        registry (rich KeyError on unknown names)."""
+        if self.slo is None:
+            self.slo = AdmissionController(self)
+        self.slo.register(contract,
+                          now=self._now if now is None else now)
+
     def submit(self, tenant: str, module: str, chunks,
                now: float = 0.0, priority: int = 0,
                deadline_ms: float | None = None,
-               affinity: str | None = None) -> FabricJob:
+               affinity: str | None = None,
+               contract: QoSContract | None = None) -> FabricJob:
         """Admit a job.  `chunks` is a payload list (live mode) or a bare
         chunk count (simulation).  Dispatch to a shell happens at the
-        next `schedule` call."""
+        next `schedule` call.
+
+        `contract` registers (or refreshes) the tenant's `QoSContract`
+        before screening — sugar for `register_contract` at the front
+        door.  With any contract registered on the fabric, the
+        `AdmissionController` screens the offered job first: a
+        ``DEGRADE`` verdict transparently swaps `module` to the
+        contract's degraded implementation (the offered name survives in
+        `FabricJob.degraded_from`), and a ``REJECT`` verdict returns a
+        job with `rejected=True` that never enters the admission queue
+        — the caller reads the predicted violation off `job.verdict`.
+        """
         self.registry.module(module)         # validates, nice KeyError
+        if contract is not None:
+            self.register_contract(contract, now=max(self._now, now))
+        verdict: AdmissionVerdict | None = None
+        degraded_from: str | None = None
+        if self.slo is not None:
+            t_adm = max(self._now, now)
+            n_offered = chunks if isinstance(chunks, int) else len(chunks)
+            verdict = self.slo.decide(tenant, module, n_offered, t_adm)
+            if verdict.action == DEGRADE:
+                # (an unknown affinity falls through to the rich
+                # KeyError of the placement validation below)
+                fit = self.states[affinity].alloc.n \
+                    if affinity in self.states else \
+                    max(st.alloc.n for st in self.states.values())
+                if self._min_fp(verdict.degraded_to) <= fit:
+                    degraded_from, module = module, verdict.degraded_to
+                else:
+                    # the degraded form can't be placed where this job
+                    # must run; the offered form was already infeasible
+                    verdict = AdmissionVerdict(
+                        REJECT, tenant, violated=verdict.violated,
+                        predicted_ms=verdict.predicted_ms,
+                        reason=verdict.reason + "; degraded form does "
+                        "not fit the target shell — rejected")
+            if verdict.action == REJECT:
+                self.slo.note_rejected(tenant, t_adm)
+                gid = next(self._rid)
+                job = FabricJob(gid, tenant, module, n_offered,
+                                priority=priority,
+                                deadline_ms=deadline_ms,
+                                affinity=affinity, t_submit=now,
+                                verdict=verdict, rejected=True)
+                self.jobs[gid] = job
+                self._now = t_adm
+                return job
         min_fp = self._min_fp(module)
         if affinity is not None:
             if affinity not in self.states:
@@ -410,6 +485,12 @@ class Fabric:
         self.jobs[gid] = job
         self._now = max(self._now, now)
         self._admission.append(job)
+        if verdict is not None:
+            job.verdict = verdict
+            job.degraded_from = degraded_from
+            self.slo.note_admitted(tenant, module, n_chunks, priority,
+                                   self._now,
+                                   degraded=degraded_from is not None)
         return job
 
     def abort(self, gid: int) -> None:
@@ -580,6 +661,11 @@ class Fabric:
             else vst.steal_pending(req.rid, k)
         if not taken:
             return 0
+        # the taken chunks' (shell, rid, chunk) identities are retired
+        # on every steal path — tail and resume alike — so executor
+        # state keyed to them (per-chunk transfer charges) releases
+        # exactly, including a previously-stolen chunk stolen again
+        self._moved.extend((victim, req.rid, c) for c in taken)
         global_ids = [cmap[c] for c in taken]
         payloads = None if job.payloads is None else \
             [job.payloads[g] for g in global_ids]
@@ -740,7 +826,21 @@ class Fabric:
             job.done += 1
             if job.complete and job.t_finish is None:
                 job.t_finish = now
+                if self.slo is not None:
+                    # score the finished job against its contract's
+                    # deadline (attainment accounting; no-op for
+                    # non-contract tenants)
+                    self.slo.record_completion(
+                        job.tenant, now - job.t_submit,
+                        job.deadline_ms, now)
         return True
+
+    def drain_moved(self) -> list[tuple[str, int, int]]:
+        """Chunk identities retired by steals since the last drain —
+        the chunk now lives under a thief sub-request, so executor
+        bookkeeping keyed to `(shell, rid, chunk)` must be released."""
+        out, self._moved = self._moved, []
+        return out
 
     def drain_preempted(self) -> list[tuple[str, Assignment]]:
         """Victim assignments since the last drain, tagged by shell; the

@@ -198,6 +198,16 @@ class PolicyConfig:
     reserve_slots_max: int = 1
     # EWMA weight of the newest inter-arrival/service observation
     arrival_alpha: float = 0.3
+    # -- SLO-aware admission control (core/slo.py) -----------------------
+    # EWMA weight of the admission controller's own load estimates
+    # (per-contract job slot-ms and the background arrival stream); the
+    # controller only exists once a QoSContract is registered, so these
+    # knobs are inert on the no-contract path
+    admission_alpha: float = 0.3
+    # offered utilisation at or above which every finite deadline is
+    # predicted infeasible (the Little's-law queue would grow without
+    # bound); kept below 1.0 so the model saturates before the fabric
+    admission_rho_max: float = 0.95
 
 
 class CostModel:

@@ -104,6 +104,10 @@ class SimResult:
     # constant once, a zero reservation records nothing)
     reserve_history: dict[str, list] = dataclasses.field(
         default_factory=dict)
+    # per-tenant SLO attainment snapshot (core/slo.py): verdict counts,
+    # deadline-hit fraction, bounded attainment history.  Empty — and
+    # absent from golden serialisations — without registered contracts
+    slo: dict = dataclasses.field(default_factory=dict)
 
     @property
     def mean_latency(self) -> float:
@@ -237,6 +241,13 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
         nonlocal seq, busy_time, wasted_time, reconfs
         nonlocal discarded_ms, reclaimed_ms
         new = fabric.schedule(now=t0)
+        for ck in fabric.drain_moved():
+            # a steal retires the chunk's (shell, rid, chunk) identity:
+            # release its transfer-charge record so a transfer-paid
+            # chunk that is preempted and then re-stolen leaves no
+            # residue (the re-steal is a fresh payload movement and is
+            # priced under its new identity)
+            paid_chunks.discard(ck)
         for shell, v in fabric.drain_preempted():
             stale.add(v.aid)
             tr = charged.pop(v.aid, 0.0)
@@ -300,11 +311,21 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
                             now=t, priority=j.priority,
                             deadline_ms=j.deadline_ms,
                             affinity=j.affinity)
-        meta[job.gid] = {"tenant": j.tenant,
-                         "priority": j.priority,
-                         "deadline_ms": j.deadline_ms,
-                         "n_chunks": j.n_chunks,
-                         "t_submit": t}
+        m = {"tenant": j.tenant,
+             "priority": j.priority,
+             "deadline_ms": j.deadline_ms,
+             "n_chunks": j.n_chunks,
+             "t_submit": t}
+        if job.verdict is not None:
+            # admission-screened: record the structured verdict (keys
+            # only exist on contract runs — the no-contract meta dict
+            # is unchanged, byte for byte)
+            m["verdict"] = job.verdict.action
+            if job.degraded_from is not None:
+                m["degraded_from"] = job.degraded_from
+            if job.verdict.reason:
+                m["verdict_reason"] = job.verdict.reason
+        meta[job.gid] = m
 
     while events:
         now, _, kind, obj = heapq.heappop(events)
@@ -361,7 +382,8 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
             charged.pop(a.aid, None)
         dispatch(now)
 
-    assert all(j.complete for j in fabric.jobs.values()), \
+    assert all(j.complete or j.rejected
+               for j in fabric.jobs.values()), \
         "simulator finished with incomplete requests"
     for st in fabric.states.values():
         assert not st.alloc.busy, "simulator finished with busy slots"
@@ -369,14 +391,15 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
     assert fabric.ckpt is None or len(fabric.ckpt) == 0, \
         "simulator finished with unconsumed checkpoint records"
     # bookkeeping must drain exactly: every dispatched aid was either
-    # completed or preempted (starts/charged), and every stale "done"
-    # event was skipped or compacted away.  (paid_chunks may retain an
-    # entry when a transfer-paid chunk is preempted and then re-stolen
-    # — it completes under a new sub-request identity — but completion
-    # releases the common case, so residue is bounded by re-steals.)
-    assert not starts and not charged and not stale, \
+    # completed or preempted (starts/charged), every stale "done" event
+    # was skipped or compacted away, and every transfer charge was
+    # released by completion or by the retirement of its chunk identity
+    # at a re-steal (drain_moved) — the charge map is exact
+    assert not starts and not charged and not stale \
+        and not paid_chunks, \
         "simulator finished with leaked bookkeeping entries"
-    lat = {j.gid: j.t_finish - j.t_submit for j in fabric.jobs.values()}
+    lat = {j.gid: j.t_finish - j.t_submit
+           for j in fabric.jobs.values() if not j.rejected}
     util = busy_time / (now * total_slots) if now > 0 else 0.0
     n_pre = sum(st.n_preemptions for st in fabric.states.values())
     per_shell = {
@@ -399,4 +422,6 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
                      ckpt_migrations=cstats.get("migrations", 0),
                      reserve_history={
                          name: list(st.reserve_history)
-                         for name, st in fabric.states.items()})
+                         for name, st in fabric.states.items()},
+                     slo=(fabric.slo.attainment()
+                          if fabric.slo is not None else {}))

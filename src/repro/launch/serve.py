@@ -75,6 +75,8 @@ class DaemonServeRun:
     priority_hi: int = 3
     deadline_ms: float = 2000.0     # interactive SLO (wall clock, live)
     preemptive: bool = True
+    contract: bool = False          # register a QoSContract for "live"
+    contract_rate_per_s: float = 50.0
     seed: int = 0
 
 
@@ -85,10 +87,15 @@ def serve_daemon(run: DaemonServeRun, log=print) -> dict:
     interactive tenant submits short sobel requests at `priority_hi` with a
     deadline.  Under the preemptive policy the daemon cancels and requeues
     batch chunks when the interactive class would otherwise queue behind
-    them.  Returns per-class latency stats and the daemon counters.
+    them.  With `contract=True` the live tenant additionally registers a
+    `QoSContract` (deadline = `deadline_ms`, degraded mode "sobel-lite"):
+    submits are screened by the admission controller, and the result dict
+    carries the live SLO attainment ledger.  Returns per-class latency
+    stats and the daemon counters.
     """
-    from repro.core import Daemon, PolicyConfig, Shell, default_registry, \
-        uniform_shell
+    from repro.core import AdmissionRejected, Daemon, ImplAlt, \
+        ModuleDescriptor, PolicyConfig, QoSContract, Shell, \
+        default_registry, uniform_shell
     from repro.core.daemon import _now_ms
     from repro.core.simulator import p95
 
@@ -98,6 +105,18 @@ def serve_daemon(run: DaemonServeRun, log=print) -> dict:
     reg.register_shell(spec)
     daemon = Daemon(Shell(spec), reg,
                     PolicyConfig(preemptive=run.preemptive))
+    contract = None
+    if run.contract:
+        # the degraded tier: same sobel kernel builder, declared at a
+        # cheaper estimate so the controller can swap to it when the
+        # full-rate contract stops being feasible
+        reg.register_module(ModuleDescriptor(
+            name="sobel-lite", entrypoint="repro.core.zoo:build_sobel",
+            impls=(ImplAlt("x1", 1, 2.0),), kind="fn"))
+        contract = QoSContract("live", rate_per_s=run.contract_rate_per_s,
+                               deadline_ms=run.deadline_ms,
+                               degraded="sobel-lite")
+        daemon.register_contract(contract)
     rng = np.random.default_rng(run.seed)
     re_t = rng.uniform(-2, 1, (256, 256)).astype(np.float32)
     im_t = rng.uniform(-1.5, 1.5, (256, 256)).astype(np.float32)
@@ -121,22 +140,39 @@ def serve_daemon(run: DaemonServeRun, log=print) -> dict:
             h.future.add_done_callback(
                 lambda _, rid=h.rid: done_at.setdefault(rid, _now_ms()))
             live_handles.append(h)
+        rejected = 0
         for h in live_handles + batch_handles:
-            h.future.result(timeout=600)
-        live_lat = [done_at[h.rid] - h.t_submit for h in live_handles]
+            try:
+                h.future.result(timeout=600)
+            except AdmissionRejected:
+                rejected += 1       # shed by the contract screen
+        live_lat = [done_at[h.rid] - h.t_submit for h in live_handles
+                    if h.future.exception() is None]
         wall = time.perf_counter() - t0
         live_p95 = p95(live_lat)
         misses = sum(1 for l in live_lat if l > run.deadline_ms)
         s = daemon.stats
+        slo = daemon.slo_stats if run.contract else {}
+        extra = ""
+        if run.contract and "live" in slo:
+            lv = slo["live"]
+            att = lv["attainment"]
+            extra = (f", contract: {lv['admitted']} admitted / "
+                     f"{lv['degraded']} degraded / "
+                     f"{lv['rejected']} rejected"
+                     + (f", attainment {att:.2f}"
+                        if att is not None else ""))
         log(f"[serve/daemon] {n_dev} slot(s), "
             f"{'preemptive' if run.preemptive else 'cooperative'}: "
             f"live p95 {live_p95:.0f} ms "
             f"({misses}/{len(live_lat)} SLO misses), "
             f"wall {wall:.2f}s, chunks={s['chunks']} "
             f"preemptions={s['preemptions']} "
-            f"reconfigs={s['reconfigurations']} reuses={s['reuses']}")
+            f"reconfigs={s['reconfigurations']} reuses={s['reuses']}"
+            f"{extra}")
         return {"live_p95_ms": live_p95, "slo_misses": misses,
-                "wall_s": wall, "stats": dict(s)}
+                "live_rejected": rejected, "wall_s": wall,
+                "stats": dict(s), "slo": slo}
     finally:
         daemon.shutdown()
 
@@ -153,11 +189,18 @@ def main():
     ap.add_argument("--priority-hi", type=int, default=3)
     ap.add_argument("--deadline-ms", type=float, default=2000.0)
     ap.add_argument("--no-preempt", action="store_true")
+    ap.add_argument("--contract", action="store_true",
+                    help="register a QoSContract for the live tenant "
+                         "(admission screening + attainment ledger)")
+    ap.add_argument("--contract-rate", type=float, default=50.0,
+                    help="contract target arrival rate (jobs/s)")
     args = ap.parse_args()
     if args.daemon:
         serve_daemon(DaemonServeRun(priority_hi=args.priority_hi,
                                     deadline_ms=args.deadline_ms,
-                                    preemptive=not args.no_preempt))
+                                    preemptive=not args.no_preempt,
+                                    contract=args.contract,
+                                    contract_rate_per_s=args.contract_rate))
         return
     serve(ServeRun(arch=args.arch, batch=args.batch,
                    prompt_len=args.prompt_len,

@@ -100,6 +100,64 @@ def test_estimator_demand_slots_formula():
         ArrivalEstimator(alpha=0.0)
 
 
+def test_estimator_single_arrival_contributes_no_demand():
+    """One arrival fixes service/footprint EWMAs but no inter-arrival,
+    so the class has rate 0 and adds nothing to demand — a lone probe
+    job must not inflate the reservation."""
+    est = ArrivalEstimator(alpha=0.5)
+    est.observe(3, 5.0, service_ms=4.0, footprint=2)
+    assert est.interarrival_ms(3) is None
+    assert est.rate_per_ms(3, 5.0) == 0.0
+    assert est.demand_slots(3, 5.0, overhead_ms=5.0) == 0.0
+    # the lone batch observation still supplies the blocking term once
+    # a *rated* interactive class exists
+    est.observe(0, 0.0, service_ms=40.0)
+    assert est.blocking_ms(3) == 40.0
+    assert est.demand_slots(3, 5.0) == 0.0          # still no rate
+
+
+def test_estimator_stopped_stream_releases_demand():
+    """A stream that stops arriving decays to rate 0, and with it the
+    demand share it was holding: the adaptive reservation frees the
+    capacity instead of predicting the burst forever."""
+    est = ArrivalEstimator(alpha=0.5)
+    for t in (0.0, 10.0, 20.0, 30.0):
+        est.observe(3, t, service_ms=4.0)
+    active = est.demand_slots(3, 30.0)
+    assert active == pytest.approx((1 / 10) * 4.0)
+    # inside the staleness grace window the share is untouched...
+    assert est.demand_slots(3, 30.0 + STALE_FACTOR * 10.0) \
+        == pytest.approx(active)
+    # ...then decays hyperbolically with the gap: 1% of the share left
+    # after 100 grace windows, vanishing in the limit
+    far = 30.0 + 100.0 * STALE_FACTOR * 10.0
+    assert est.demand_slots(3, far) == pytest.approx(active / 100)
+    assert est.demand_slots(3, 1e12) < 1e-6
+
+
+def test_estimator_memo_invalidated_by_new_class():
+    """demand_slots memoizes per (now, observation version): a new
+    priority class appearing between two same-instant queries must be
+    visible to the second one, not masked by the memo."""
+    est = ArrivalEstimator(alpha=1.0)
+    est.observe(3, 0.0, service_ms=4.0)
+    est.observe(3, 10.0, service_ms=4.0)
+    base = est.demand_slots(3, 10.0)
+    assert base == pytest.approx((1 / 10) * 4.0)
+    assert est.demand_slots(3, 10.0) is est.demand_slots(3, 10.0) \
+        or est.demand_slots(3, 10.0) == base        # memo hit, same value
+    # a brand-new higher class appears "mid-instant" (e.g. admitted by
+    # another shell's pass at the same virtual time)
+    est.observe(5, 5.0, service_ms=8.0)
+    est.observe(5, 10.0, service_ms=8.0)
+    bumped = est.demand_slots(3, 10.0)
+    assert bumped == pytest.approx(base + (1 / 5) * 8.0)
+    # and the per-key cache still serves distinct (overhead, speed)
+    # keys correctly after the invalidation
+    assert est.demand_slots(3, 10.0, overhead_ms=2.0) \
+        == pytest.approx((1 / 10) * 6.0 + (1 / 5) * 10.0)
+
+
 def test_reserve_mode_typo_rejected():
     """A misspelled reserve_mode must fail loudly, not silently fall
     back to the static path with the operator believing adaptive

@@ -63,6 +63,16 @@ def test_golden_traces_have_feature_coverage():
     assert res["static_reserve_preempt"].preemptions > 10
     assert res["ckpt_incapable_mix"].discarded_ms > 0
     assert res["single_shell_seed"].preemptions > 0
+    # the admission trace must exercise every verdict kind, on top of
+    # stealing + checkpointing + the adaptive reservation
+    slo = res["contracts_full"].slo
+    assert sum(e["degraded"] for e in slo.values()) > 0
+    assert sum(e["rejected"] for e in slo.values()) > 0
+    assert sum(e["admitted"] for e in slo.values()) > 0
+    assert any(e["contract"] and e["attainment"] is not None
+               for e in slo.values())
+    assert res["contracts_full"].stolen_chunks > 0
+    assert res["contracts_full"].ckpt_saves > 0
 
 
 # -- 2. old-vs-new equivalence ------------------------------------------------
@@ -312,3 +322,30 @@ def test_abort_is_idempotent_on_pending_counter():
     assert st_.pending_chunks() == st_._pending_chunks_slow() == 2
     st_.abort(r2.rid)
     assert st_.pending_chunks() == st_._pending_chunks_slow() == 0
+
+
+def test_resteal_releases_transfer_charge():
+    """Steal -> evict -> re-steal of the same transfer-paid chunk: the
+    re-steal retires the chunk's old (shell, rid, chunk) identity, and
+    the simulator must release its transfer-charge record — the
+    end-of-run `not paid_chunks` assert inside simulate() is the
+    oracle (before the drain_moved fix this scenario left residue).
+
+    Forced deterministically: a batch job pinned to "a" overflows; "b"
+    and "c" each steal one chunk and pay the 5 ms transfer at dispatch;
+    a high-priority burst pinned to "b" evicts b's paid chunk while it
+    is still queued behind the burst; fast "c" goes idle first and
+    re-steals that exact chunk from "b"."""
+    reg = build_registry()
+    pol = PolicyConfig(preemptive=True, transfer_ms=5.0)
+    fab = Fabric({"a": (2, 1.0), "b": (1, 1.0), "c": (1, 4.0)}, reg, pol)
+    jobs = [SimJob(0.0, "bulk", "batch", 4, affinity="a"),
+            SimJob(1.0, "live", "inter", 5, priority=5, affinity="b")]
+    res = simulate(reg, fab, jobs)
+    assert res.preemptions >= 1           # b's stolen chunk was evicted
+    assert res.stolen_chunks >= 3         # b, c, then c again (re-steal)
+    (bulk,) = [j for j in fab.jobs.values() if j.tenant == "bulk"]
+    # primary on a, steals onto b and c, and the re-steal onto c again
+    assert len(bulk.subs) >= 4
+    shells = [s for s, _ in bulk.subs]
+    assert shells.count("c") >= 2

@@ -1,0 +1,335 @@
+"""SLO-aware admission control (core/slo.py).
+
+Contract under test:
+  - `QoSContract` validates its fields; an unknown degraded-module name
+    raises the registry's rich KeyError at registration, through every
+    front door (`Fabric.register_contract`, `Fabric.submit(contract=)`,
+    `Daemon.register_contract`);
+  - with any contract registered, `Fabric.submit` screens the offered
+    job: ``ADMIT`` on a feasible fabric, ``DEGRADE`` transparently swaps
+    the job to the contract's degraded module (offered name preserved in
+    `FabricJob.degraded_from`), ``REJECT`` returns a never-scheduled job
+    whose verdict names the predicted contract violation;
+  - a stopped contract tenant's protected feasibility share decays with
+    staleness, so background work rejected during its burst is admitted
+    again after the stream goes quiet;
+  - verdicts and per-tenant attainment thread through `SimResult.slo`,
+    `request_meta`, and the live `Daemon` (`slo_stats`, futures failing
+    with `AdmissionRejected`);
+  - contracts are *fully optional*: with none registered the controller
+    is never constructed, the admission knobs are inert, and every
+    `SimResult` field is byte-identical to the pre-SLO contract
+    (property here; the golden corpus pins the same thing against
+    committed PR 6 fixtures);
+  - the admission path joins the incremental-vs-full-reschedule
+    equivalence discipline: the contracts golden trace produces
+    identical dumps through both cores.
+"""
+from __future__ import annotations
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import ADMIT, AdmissionRejected, DEGRADE, Fabric, \
+    ImplAlt, ModuleDescriptor, PolicyConfig, QoSContract, REJECT, \
+    Registry, SimJob, simulate
+from repro.core.slo import HISTORY_MAX
+
+from tests.golden_traces import to_jsonable
+
+
+def _registry() -> Registry:
+    reg = Registry()
+    reg.register_module(ModuleDescriptor(
+        name="batch", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 40.0), ImplAlt("x2", 2, 22.0))))
+    reg.register_module(ModuleDescriptor(
+        name="inter", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 4.0), ImplAlt("x2", 2, 2.4))))
+    reg.register_module(ModuleDescriptor(
+        name="lite", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 1.5),)))
+    return reg
+
+
+# -- contract validation ------------------------------------------------------
+
+def test_contract_field_validation():
+    with pytest.raises(ValueError, match="rate_per_s"):
+        QoSContract("t", rate_per_s=0.0, deadline_ms=10.0)
+    with pytest.raises(ValueError, match="deadline_ms"):
+        QoSContract("t", rate_per_s=1.0, deadline_ms=-5.0)
+    with pytest.raises(ValueError, match="percentile"):
+        QoSContract("t", rate_per_s=1.0, deadline_ms=10.0,
+                    percentile=1.0)
+    c = QoSContract("t", rate_per_s=50.0, deadline_ms=100.0)
+    assert c.ia_ms == pytest.approx(20.0)
+    assert c.tail_factor == pytest.approx(2.9957, abs=1e-3)
+
+
+def test_unknown_degraded_module_rich_keyerror():
+    """The degraded-impl name is validated like `Registry.shell()` —
+    the error names the unknown module and lists what is registered."""
+    reg = _registry()
+    fab = Fabric({"s0": 4}, reg, PolicyConfig())
+    bad = QoSContract("t", rate_per_s=1.0, deadline_ms=100.0,
+                      degraded="nope")
+    with pytest.raises(KeyError) as ei:
+        fab.register_contract(bad)
+    msg = str(ei.value)
+    assert "nope" in msg and "batch" in msg and "inter" in msg
+    # same validation through the submit(contract=) sugar; the fabric
+    # must be left contract-free (nothing was registered)
+    fab2 = Fabric({"s0": 4}, reg, PolicyConfig())
+    with pytest.raises(KeyError):
+        fab2.submit("t", "inter", 1, contract=bad)
+    assert fab2.slo is None or not fab2.slo.contracts.get("t")
+
+
+# -- verdict semantics --------------------------------------------------------
+
+def _contracted_fabric(deadline_ms=1e6, degraded=None, rate_per_s=20.0,
+                       shells=None):
+    reg = _registry()
+    fab = Fabric(shells or {"s0": 4}, reg, PolicyConfig())
+    fab.register_contract(QoSContract(
+        "beta", rate_per_s=rate_per_s, deadline_ms=deadline_ms,
+        degraded=degraded))
+    return reg, fab
+
+
+def test_admit_on_idle_fabric():
+    reg, fab = _contracted_fabric()
+    job = fab.submit("beta", "inter", 2, now=0.0)
+    assert not job.rejected
+    assert job.verdict is not None and job.verdict.action == ADMIT
+    assert job.degraded_from is None
+    att = fab.slo.attainment()["beta"]
+    assert att["admitted"] == 1 and att["rejected"] == 0
+
+
+def test_reject_names_the_predicted_violation():
+    """Under a committed backlog the verdict carries which contract
+    breaks and the predicted-vs-target numbers, and the job never
+    enters the admission queue."""
+    reg = _registry()
+    fab = Fabric({"s0": 4}, reg, PolicyConfig())
+    for i in range(8):                    # pre-contract: all admitted
+        fab.submit("acme", "batch", 6, now=0.0)
+    fab.schedule(now=0.0)                 # commit them to shell queues
+    fab.register_contract(QoSContract(
+        "beta", rate_per_s=20.0, deadline_ms=60.0), now=0.0)
+    job = fab.submit("beta", "inter", 1, now=0.0)
+    assert job.rejected and job.verdict.action == REJECT
+    assert job.verdict.violated == "beta"
+    assert "beta" in job.verdict.reason
+    assert "60" in job.verdict.reason
+    assert job.verdict.predicted_ms > 60.0
+    assert job.subs == [] and job.gid not in [
+        j.gid for j in fab._admission]
+    att = fab.slo.attainment()
+    assert att["beta"]["rejected"] == 1
+
+
+def test_rejection_threads_through_simresult():
+    """A rejected job appears in `request_meta` with its verdict but
+    never in `request_latency`, and `SimResult.slo` carries the
+    per-tenant counts."""
+    reg, fab = _contracted_fabric(deadline_ms=60.0)
+    # beta's first job anchors its protected stream; the heavy
+    # background job would then add 240 slot-ms of predicted wait and
+    # break the 60 ms contract, so it is shed
+    res = simulate(reg, fab, [
+        SimJob(0.0, "beta", "inter", 1, priority=2),
+        SimJob(0.5, "acme", "batch", 6)])
+    by_tenant = {m["tenant"]: (gid, m)
+                 for gid, m in res.request_meta.items()}
+    gid_acme, m_acme = by_tenant["acme"]
+    gid_beta, m_beta = by_tenant["beta"]
+    assert m_acme["verdict"] == REJECT and "beta" in m_acme["verdict_reason"]
+    assert m_beta["verdict"] == ADMIT and "verdict_reason" not in m_beta
+    assert gid_acme not in res.request_latency
+    assert gid_beta in res.request_latency
+    assert res.slo["acme"]["rejected"] == 1
+    assert res.slo["beta"]["admitted"] == 1
+    assert res.slo["beta"]["attainment"] == 1.0
+
+
+def test_degrade_transparently_swaps_module():
+    """An offered job that would break its own contract, whose degraded
+    form fits, runs as the degraded module — the offered name survives
+    in `degraded_from` and the attainment counters."""
+    reg, fab = _contracted_fabric(deadline_ms=150.0, degraded="lite")
+    # offered: 2x40 = 80 serial ms -> (wait + reconfig + 80) * ~3x tail
+    # blows 150 ms; degraded: 2x1.5 = 3 serial ms fits easily
+    job = fab.submit("beta", "batch", 2, now=0.0)
+    assert not job.rejected
+    assert job.verdict.action == DEGRADE
+    assert job.module == "lite" and job.degraded_from == "batch"
+    assert job.verdict.degraded_to == "lite"
+    assert job.verdict.violated == "beta"
+    assert fab.slo.attainment()["beta"]["degraded"] == 1
+    # the simulator path records the verdict in request_meta and runs
+    # the job to completion as the degraded module
+    res2 = simulate(_registry(), _degrade_fabric(), [
+        SimJob(0.0, "beta", "batch", 2, priority=2)])
+    (gid,) = list(res2.request_meta)
+    assert res2.request_meta[gid]["verdict"] == DEGRADE
+    assert res2.request_meta[gid]["degraded_from"] == "batch"
+    assert res2.slo["beta"]["degraded"] == 1
+    assert res2.slo["beta"]["completed"] == 1
+    # a degraded chunk takes lite's 1.5 ms, not batch's 40 ms
+    assert res2.makespan < 20.0
+
+
+def _degrade_fabric():
+    reg = _registry()
+    fab = Fabric({"s0": 4}, reg, PolicyConfig())
+    fab.register_contract(QoSContract(
+        "beta", rate_per_s=20.0, deadline_ms=150.0, degraded="lite"))
+    return fab
+
+
+def test_stopped_tenant_share_decays_and_readmits():
+    """A contract tenant's declared-rate share protects capacity while
+    it offers work; once it stops, staleness releases the share and a
+    background submit rejected during the burst is admitted again."""
+    reg, fab = _contracted_fabric(deadline_ms=1e6, rate_per_s=200.0)
+    # the burst: establish beta's per-job cost (5 heavy jobs)
+    for i in range(5):
+        fab.submit("beta", "batch", 6, now=float(i))
+    # during the burst the offered utilisation alone exceeds rho_max
+    # (200/s x 240 slot-ms >> 4 slots), so background work is shed
+    v_burst = fab.slo.decide("acme", "inter", 1, now=5.0)
+    assert v_burst.action == REJECT
+    # beta goes quiet: the protected share decays as
+    # 1/(gap/STALE_FACTOR), so the same background submit is feasible
+    v_later = fab.slo.decide("acme", "inter", 1, now=300000.0)
+    assert v_later.action == ADMIT
+
+
+def test_attainment_history_is_bounded():
+    reg, fab = _contracted_fabric()
+    ctl = fab.slo
+    for i in range(HISTORY_MAX + 50):
+        ctl.record_completion("beta", latency_ms=1.0, deadline_ms=None,
+                              now=float(i))
+    assert len(ctl.history["beta"]) == HISTORY_MAX
+    att = ctl.attainment()["beta"]
+    assert att["attainment"] == 1.0
+    assert len(att["history"]) == HISTORY_MAX
+
+
+def test_attainment_scores_against_job_deadline():
+    """A finished job is scored against its own deadline when it has
+    one, the contract deadline otherwise."""
+    reg, fab = _contracted_fabric(deadline_ms=100.0)
+    ctl = fab.slo
+    ctl.record_completion("beta", 50.0, None, 1.0)     # hit (contract)
+    ctl.record_completion("beta", 150.0, None, 2.0)    # miss (contract)
+    ctl.record_completion("beta", 150.0, 200.0, 3.0)   # hit (own dl)
+    a = ctl.attainment()["beta"]
+    assert a["hits"] == 2 and a["misses"] == 1
+    assert a["attainment"] == pytest.approx(2 / 3)
+    # non-contract tenants are not scored
+    ctl.record_completion("acme", 5.0, None, 4.0)
+    assert "acme" not in ctl.history
+
+
+# -- no-contract path is byte-identical ---------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000),
+       st.integers(4, 14),
+       st.booleans(),
+       st.floats(0.05, 0.95),
+       st.floats(0.2, 0.9))
+def test_no_contract_path_ignores_admission_knobs(seed, n_jobs, preempt,
+                                                  alpha, rho_max):
+    """With no contract registered the controller never exists: the
+    admission knobs are dead config, `SimResult.slo` is empty, and the
+    full result dump is byte-identical across any knob values."""
+    rng = np.random.default_rng(seed)
+    jobs = []
+    t = 0.0
+    for _ in range(n_jobs):
+        t += float(rng.exponential(6.0)) + 1e-3
+        if rng.random() < 0.5:
+            jobs.append(SimJob(t, "acme", "batch", int(rng.integers(2, 6))))
+        else:
+            jobs.append(SimJob(t, "beta", "inter", int(rng.integers(1, 4)),
+                               priority=2, deadline_ms=30.0))
+    dumps = []
+    for a, r in ((0.3, 0.95), (alpha, rho_max)):
+        pol = PolicyConfig(preemptive=preempt, transfer_ms=1.0,
+                           reserve_mode="adaptive", reserve_slots_max=1,
+                           admission_alpha=a, admission_rho_max=r)
+        fab = Fabric({"s0": (4, 1.0), "s1": (2, 1.5)}, _registry(), pol)
+        res = simulate(fab.registry, fab, jobs)
+        assert fab.slo is None
+        assert res.slo == {}
+        d = to_jsonable(res)
+        assert "slo" not in d             # pre-SLO serialised shape
+        dumps.append(d)
+    assert dumps[0] == dumps[1]
+
+
+# -- equivalence: admission + incremental core --------------------------------
+
+def test_contracts_trace_incremental_equals_full_reschedule():
+    """The contracts golden trace through the incremental core and the
+    reference full-reschedule core — identical dumps, so the admission
+    path inherits PR 6's equivalence discipline."""
+    from tests.golden_traces import TRACES
+    dumps = []
+    for full in (False, True):
+        reg, fab, jobs = TRACES["contracts_full"]()
+        fab.full_reschedule = full
+        dumps.append(to_jsonable(simulate(reg, fab, jobs)))
+    assert dumps[0] == dumps[1]
+
+
+# -- live daemon --------------------------------------------------------------
+
+def test_daemon_contract_reject_and_attainment():
+    """Live front door: a generous contract admits and scores, a
+    hopeless one fails the future with `AdmissionRejected` carrying the
+    structured verdict, and `slo_stats` reports both."""
+    from repro.core import Daemon, Shell, default_registry, uniform_shell
+    spec = uniform_shell("slo1_s1", (1, 1), 1)
+    reg = default_registry()
+    reg.register_shell(spec)
+    d = Daemon(Shell(spec), reg)
+    try:
+        with pytest.raises(KeyError, match="registered"):
+            d.register_contract(QoSContract(
+                "live", rate_per_s=1.0, deadline_ms=100.0,
+                degraded="no-such-module"))
+        d.register_contract(QoSContract(
+            "live", rate_per_s=1.0, deadline_ms=1e9))
+        rng = np.random.default_rng(0)
+        img = rng.random((1024, 1024)).astype(np.float32)
+        h = d.submit("live", "sobel", [(img,)])
+        (out,) = h.future.result(timeout=300)
+        assert np.asarray(out).shape == (1024, 1024)
+        # a deadline below the reconfiguration penalty alone can never
+        # be met: predicted violation, future fails, nothing runs
+        d.register_contract(QoSContract(
+            "doomed", rate_per_s=1.0, deadline_ms=1e-3))
+        h2 = d.submit("doomed", "sobel", [(img,)])
+        with pytest.raises(AdmissionRejected) as ei:
+            h2.future.result(timeout=60)
+        assert ei.value.verdict.action == REJECT
+        assert ei.value.verdict.violated == "doomed"
+        stats = d.slo_stats
+        assert stats["live"]["admitted"] >= 1
+        assert stats["live"]["completed"] >= 1
+        assert stats["live"]["attainment"] is not None
+        assert stats["doomed"]["rejected"] == 1
+        # the daemon stays serviceable after a rejection
+        h3 = d.submit("live", "sobel", [(img,)])
+        h3.future.result(timeout=300)
+    finally:
+        d.shutdown()
