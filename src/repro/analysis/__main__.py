@@ -1,0 +1,34 @@
+"""CLI: `python -m repro.analysis [paths...]`.
+
+With no arguments, checks the incremental scheduling core
+(src/repro/core/*.py).  Prints one line per finding and exits 1 if
+any survive the pragmas/allowlist, 0 on a clean run — cheap enough
+(pure stdlib, no jax, <1s) to gate CI and pre-commit on.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+from repro.analysis import analyze
+
+CORE = Path(__file__).resolve().parents[1] / "core"
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    paths = [p for p in argv if not p.startswith("-")]
+    if not paths:
+        paths = sorted(str(p) for p in CORE.glob("*.py")
+                       if p.name != "__init__.py")
+    findings = analyze(paths)
+    for f in findings:
+        print(f)
+    n = len(findings)
+    print(f"schedlint: {n} finding{'s' if n != 1 else ''} "
+          f"across {len(paths)} file{'s' if len(paths) != 1 else ''}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

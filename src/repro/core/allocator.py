@@ -22,33 +22,37 @@ class Range:
 class _BusySet(set):
     """Busy-slot set that mirrors every mutation into the allocator's
     bitmask, so window-freeness stays one shift+mask even for callers
-    (tests, diagnostics) that poke `alloc.busy` directly."""
+    (tests, diagnostics) that poke `alloc.busy` directly.
+
+    Every mutation routes through the owner's `_mark`/`_unmark`
+    chokepoint (below) — the single place busy-set and bitmask move,
+    which is what the schedlint mutation checker verifies."""
 
     def __init__(self, owner: "BuddyAllocator"):
         super().__init__()
         self._owner = owner
 
     def add(self, i):
-        super().add(i)
-        self._owner._mask |= 1 << i
+        self._owner._mark(i)
 
     def discard(self, i):
-        if i in self:
-            super().discard(i)
-            self._owner._mask &= ~(1 << i)
+        self._owner._unmark(i)
 
     def remove(self, i):
-        super().remove(i)
-        self._owner._mask &= ~(1 << i)
+        if i not in self:
+            raise KeyError(i)
+        self._owner._unmark(i)
 
     def update(self, *others):
         for o in others:
             for i in o:
-                self.add(i)
+                self._owner._mark(i)
 
     def clear(self):
-        super().clear()
-        self._owner._mask = 0
+        # schedlint: ok(determinism) _unmark is commutative (discard +
+        # mask clear): the final busy/mask state is iteration-order-free
+        for i in tuple(self):
+            self._owner._unmark(i)
 
 
 class BuddyAllocator:
@@ -108,26 +112,38 @@ class BuddyAllocator:
         return None
 
     # -- mutation -----------------------------------------------------------
+    # `_mark`/`_unmark` are the single mutation chokepoint: every busy/
+    # mask change — alloc, free, and direct `alloc.busy` pokes through
+    # `_BusySet` — flows through them, so the busy set and the bitmask
+    # cannot drift apart and the schedlint mutation checker has exactly
+    # one pair of writers to verify.
+
+    def _mark(self, i: int) -> None:
+        set.add(self.busy, i)             # raw set op: no _BusySet loop
+        self._mask |= 1 << i
+
+    def _unmark(self, i: int) -> None:
+        set.discard(self.busy, i)
+        self._mask &= ~(1 << i)
 
     def alloc(self, size: int) -> Range | None:
         r = self.find(size)
         if r is None:
             return None
-        set.update(self.busy, r.slots)    # one mask op, not per-slot
-        self._mask |= ((1 << r.size) - 1) << r.start
+        for i in r.slots:
+            self._mark(i)
         return r
 
     def alloc_at(self, r: Range) -> None:
         assert self.window_free(r.start, r.size), "double alloc"
         assert r.start % r.size == 0, "unaligned"
-        set.update(self.busy, r.slots)
-        self._mask |= ((1 << r.size) - 1) << r.start
+        for i in r.slots:
+            self._mark(i)
 
     def free(self, r: Range) -> None:
         for i in r.slots:
             assert i in self.busy, f"double free of slot {i}"
-            set.discard(self.busy, i)
-        self._mask &= ~(((1 << r.size) - 1) << r.start)
+            self._unmark(i)
 
     @property
     def utilization(self) -> float:

@@ -57,6 +57,18 @@ import dataclasses
 # few expected inter-arrivals
 STALE_FACTOR = 6.0
 
+# schedlint memo contract (analysis/memo.py): the demand memo is keyed
+# on the query instant and the observation version (plus the argument
+# tuple), so it may read the whole per-class EWMA surface and the clock
+# but nothing of any shell's scheduling state.
+MEMO_CONTRACTS = (
+    {"name": "demand_slots",
+     "func": "ArrivalEstimator.demand_slots",
+     "cache": "_demand",
+     "key": ("arrivals", "now", "args"),
+     "folded": {}},
+)
+
 
 @dataclasses.dataclass
 class ClassStats:

@@ -62,6 +62,15 @@ class ChunkCheckpoint:
         return max(0.0, 1.0 - self.progress)
 
 
+# schedlint (analysis/mutation.py): checkpoint records carry no version
+# of their own — they piggyback on the owning shell's `_version`.  That
+# is sound only if every call to one of these mutators sits on an
+# execution path that also bumps a shell version; the mutation checker
+# enforces exactly that, which is what lets memo keys treat
+# `_recs`/`_rid_progress` reads as covered by the "state" token.
+CKPT_MUTATORS = ("save", "take", "rekey", "drop_request")
+
+
 class CheckpointManager:
     """Owns `ChunkCheckpoint` records and prices save/restore.
 

@@ -64,6 +64,7 @@ import itertools
 from collections import deque
 from typing import Any, Iterable, Mapping
 
+from repro.analysis import sanitizer
 from repro.core.arrivals import ArrivalEstimator
 from repro.core.checkpoint import CheckpointManager
 from repro.core.registry import parse_transfer_pair
@@ -111,6 +112,38 @@ class FabricJob:
         if self.deadline_ms is None:
             return float("inf")
         return self.t_submit + self.deadline_ms
+
+
+# -- schedlint memo contracts (checked by `python -m repro.analysis`) --------
+#
+# Every memo cache the incremental fabric leans on, with the version
+# tokens its key covers.  The memo checker (analysis/memo.py) walks the
+# cached computation and flags any read of versioned state the key
+# misses; `folded` declares tokens covered indirectly, each with the
+# argument for why.  Plain literals on purpose: the checker extracts
+# them from the AST without importing this module.
+MEMO_CONTRACTS = (
+    {"name": "backlog_ms",
+     "func": "Fabric._backlog_ms",
+     "cache": "_backlog_cache",
+     "key": ("state", "cost"),
+     "folded": {}},
+    {"name": "steal_fingerprint",
+     "func": "Fabric._steal_from",
+     "cache": "_steal_fail",
+     "key": ("state", "cost", "reserve"),
+     "folded": {
+         "arrivals": "Fabric.schedule resamples every shell's "
+                     "reservation from the estimator on every event "
+                     "(sample_reserve), so an arrival-model change is "
+                     "folded into the thief's _reserve_last — which "
+                     "the fingerprint covers directly — before any "
+                     "steal gate runs",
+         "now": "the clock enters the gate only through the per-event "
+                "reservation sample (_reserve_last, covered) and the "
+                "demand memo, which keys on `now` itself; the drain/"
+                "price comparison reads no absolute time"}},
+)
 
 
 class Fabric:
@@ -754,6 +787,12 @@ class Fabric:
         event).  docs/simulator.md derives the invariant."""
         now = self._now if now is None else max(self._now, now)
         self._now = now
+        if sanitizer.SANITIZE:
+            # every shell, every event — the *clean* shells are the ones
+            # a touch-less mutation would silently corrupt (the elision
+            # below would keep treating them as scheduling fixpoints)
+            for st in self.states.values():
+                sanitizer.check(st)
         run, self._dirty = self._dirty, set()
         if self.full_reschedule:
             run.update(self.states)

@@ -50,6 +50,7 @@ import itertools
 from collections import deque
 from typing import Any, Optional
 
+from repro.analysis import sanitizer
 from repro.core.allocator import BuddyAllocator, Range
 from repro.core.arrivals import ArrivalEstimator
 from repro.core.checkpoint import CheckpointManager
@@ -253,6 +254,67 @@ class CostModel:
         self.version += 1
 
 
+# -- schedlint contract (repro.analysis) ------------------------------------
+# One source of truth shared by the code and the static checker
+# (`python -m repro.analysis`): the incremental fabric core elides
+# scheduling passes for shells whose `_version` has not moved, so every
+# mutation of the fields below MUST be accompanied by a version bump
+# (`_touch` for external entry points — it also fires `on_change`, the
+# fabric's dirty-set hook — or `_bump` for scheduling-internal paths) on
+# the same execution path.  The mutation checker (analysis/mutation.py)
+# proves this per-commit; the runtime sanitizer (REPRO_SANITIZE=1,
+# analysis/sanitizer.py) shadow-hashes the same fields and asserts the
+# dynamic counterpart between passes.  docs/static_analysis.md derives
+# the invariant from docs/simulator.md's dirty-shell fixpoint argument.
+TRACKED_FIELDS = (
+    "queues", "requests", "active", "resident", "alloc",
+    "_pending_n", "_served_at", "_serve_seq",
+)
+# Method names that mutate a tracked container/object when called on it
+# (or on an alias of it).  Python's stdlib mutators plus this repo's
+# domain mutators (Request/BuddyAllocator); reads are everything else.
+TRACKED_MUTATORS = (
+    "append", "appendleft", "extend", "insert", "pop", "popleft",
+    "remove", "discard", "add", "update", "clear", "setdefault",
+    "next_chunk", "requeue_chunk", "alloc", "alloc_at", "free",
+    "_mark", "_unmark",
+)
+# External entry points: any mutating path through these must fire
+# `_touch` specifically (a bare `_bump` would move the version without
+# dirtying the fabric's incremental set — state and schedule would
+# still drift apart).
+EXTERNAL_MUTATORS = (
+    "submit", "abort", "steal_pending", "steal_front", "complete",
+)
+# Intentionally untracked mutable attributes, each with the invariant
+# that makes skipping the version bump safe.  The checker rejects
+# mutations of attributes in neither table, so a new field must be
+# classified here or in TRACKED_FIELDS before it lands.
+UNTRACKED_FIELDS = {
+    "_now": "event-time anchor; the fabric advances it for every shell "
+            "on every event, dirty or not",
+    "_version": "the version counter itself",
+    "reserve_history": "sampled per event by Fabric.schedule "
+                       "(sample_reserve); a change re-dirties the shell",
+    "_reserve_last": "hysteresis anchor of the per-event reservation "
+                     "sample; covered by the steal fingerprint directly",
+    "_reserve_now": "pass-transient pin, always reset to None",
+    "_save_ms_pending": "pass-transient preemption bookkeeping, "
+                        "consumed before the pass ends",
+    "_preempted": "executor drain queue; never read by scheduling "
+                  "decisions",
+    "n_preemptions": "reporting counter; never read by scheduling",
+    "_tenant_last_ms": "fabric-shared service map; anchors only move "
+                       "forward, so a stale next_wake fires early "
+                       "(a no-op pass), never late",
+    "_shadow": "sanitizer snapshot (analysis/sanitizer.py)",
+    "on_change": "constructor/executor wiring, not scheduling state",
+    "transfer_of": "constructor wiring (fabric hook)",
+    "_rid": "constructor wiring (fabric-shared counter)",
+    "_aid": "constructor wiring (fabric-shared counter)",
+}
+
+
 class SchedulerState:
     def __init__(self, n_slots: int, registry,
                  policy: PolicyConfig | None = None,
@@ -341,6 +403,9 @@ class SchedulerState:
         # dirty-shell set so direct state access — the daemon's legacy
         # single-shell path — still invalidates incremental scheduling
         self.on_change = None
+        # REPRO_SANITIZE shadow snapshot (analysis/sanitizer.py):
+        # (version, hash of tracked fields) at the last pass boundary
+        self._shadow = None
 
     # -- incremental bookkeeping ----------------------------------------------
 
@@ -426,8 +491,11 @@ class SchedulerState:
         req.n_chunks -= len(take)
         self._pending_n -= len(take)
         self._pop_finished(req)
-        if take:
-            self._touch()
+        # unconditional even on an empty take: _pop_finished may still
+        # drop a fully-drained request from its tenant queue (a tracked
+        # mutation), and a spurious dirty is a no-op reschedule while a
+        # missed one diverges from full_reschedule (schedlint mutation)
+        self._touch()
         return take
 
     def steal_front(self, rid: int, k: int) -> list[int]:
@@ -445,8 +513,7 @@ class SchedulerState:
         req.n_chunks -= len(take)
         self._pending_n -= len(take)
         self._pop_finished(req)
-        if take:
-            self._touch()
+        self._touch()      # unconditional: see steal_pending
         return take
 
     def pending_chunks(self) -> int:
@@ -856,6 +923,10 @@ class SchedulerState:
         """
         now = self._now if now is None else max(self._now, now)
         self._now = now
+        if sanitizer.SANITIZE:
+            # a hash change since the last pass with no version bump is
+            # a mutation the dirty-shell elision would have missed
+            sanitizer.check(self)
         # pin one reservation size for the whole pass (adaptive mode
         # recomputes from the arrival estimator; static mode returns the
         # knob) so every placement, preemption and steal decision of
@@ -866,6 +937,8 @@ class SchedulerState:
             return self._schedule_locked(now, placed)
         finally:
             self._reserve_now = None
+            if sanitizer.SANITIZE:
+                sanitizer.rearm(self)
 
     def _schedule_locked(self, now: float,
                          placed: set[int] | None) -> list[Assignment]:

@@ -79,6 +79,8 @@ class ShellSpec:
     def slot_shape(self) -> tuple[int, int]:
         shapes = {s.shape for s in self.slots}
         assert len(shapes) == 1, "slots must be homogeneous"
+        # schedlint: ok(determinism) singleton set (asserted above):
+        # there is no order to depend on
         return next(iter(shapes))
 
     def coverage(self) -> float:

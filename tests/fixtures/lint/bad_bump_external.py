@@ -1,0 +1,35 @@
+"""schedlint corpus: an external mutator that bumps but never touches.
+
+`_bump()` moves the version — enough for scheduling-internal mutations
+— but never fires `on_change`, so a fabric's dirty set misses the
+change entirely.  Methods declared in EXTERNAL_MUTATORS must `_touch`.
+Expected: flagged by the mutation checker's external rule only (the
+plain bump rule is satisfied).
+"""
+
+SCHEDLINT_SIM = True
+TRACKED_CLASS = "State"
+TRACKED_FIELDS = ("queue",)
+TRACKED_MUTATORS = ("append", "pop")
+EXTERNAL_MUTATORS = ("submit",)
+UNTRACKED_FIELDS = {"_version": "the version counter itself",
+                    "on_change": "wiring, not scheduling state"}
+
+
+class State:
+    def __init__(self):
+        self.queue = []
+        self._version = 0
+        self.on_change = None
+
+    def _touch(self):
+        self._version += 1
+        if self.on_change is not None:
+            self.on_change()
+
+    def _bump(self):
+        self._version += 1
+
+    def submit(self, item):
+        self.queue.append(item)  # EXPECT: mutation
+        self._bump()

@@ -1,0 +1,27 @@
+"""schedlint corpus: every determinism rule violated once, in a module
+declared to be on the simulator path.  Expected: one finding per
+EXPECT line, none elsewhere.
+"""
+
+import os
+import time  # EXPECT: determinism
+
+SCHEDLINT_SIM = True
+
+
+def stamp(events):
+    return time.time()
+
+
+def jitter(order):
+    if os.environ.get("FAST"):  # EXPECT: determinism
+        order.sort(key=lambda x: id(x))  # EXPECT: determinism
+    return order
+
+
+def drain(pending):
+    ready = {p for p in pending if p > 0}
+    total = sum(ready)  # EXPECT: determinism
+    for p in ready:  # EXPECT: determinism
+        total -= p
+    return total

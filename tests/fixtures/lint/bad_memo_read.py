@@ -1,0 +1,46 @@
+"""schedlint corpus: a memo cache whose key misses a versioned read.
+
+`Planner.load_ms` declares a cache keyed on the cost-model version
+only, but the computation also reads `State.depth` — versioned shell
+state.  A cached value survives the depth changing.  Expected: flagged
+by the memo checker at the uncovered read.
+"""
+
+SCHEDLINT_SIM = True
+SCHEDLINT_TYPES = {"Planner.cost": "CostModel", "Planner.shell": "State"}
+SCHEDLINT_VERSIONED = {"CostModel.version": "cost",
+                       "CostModel.per_chunk": "cost",
+                       "State.depth": "state",
+                       "State._version": "state"}
+MEMO_CONTRACTS = (
+    {"name": "load_ms", "func": "Planner.load_ms",
+     "cache": "_load_cache", "key": ("cost",), "folded": {}},
+)
+
+
+class CostModel:
+    def __init__(self):
+        self.version = 0
+        self.per_chunk = 1.0
+
+
+class State:
+    def __init__(self):
+        self.depth = 0
+        self._version = 0
+
+
+class Planner:
+    def __init__(self, shell, cost):
+        self.shell = shell
+        self.cost = cost
+        self._load_cache = {}
+
+    def load_ms(self):
+        key = self.cost.version
+        hit = self._load_cache.get(key)
+        if hit is not None:
+            return hit
+        out = self.shell.depth * self.cost.per_chunk  # EXPECT: memo
+        self._load_cache[key] = out
+        return out

@@ -1,0 +1,28 @@
+"""schedlint corpus: a tracked mutation with no version bump at all.
+
+`submit` is an external mutator (fabric/executors call it between
+scheduling passes): appending to the tracked queue without any
+`_touch()` leaves the shell looking like a scheduling fixpoint.
+Expected: flagged by the mutation checker (both the bump rule and the
+stricter external-touch rule anchor on the same line).
+"""
+
+SCHEDLINT_SIM = True
+TRACKED_CLASS = "State"
+TRACKED_FIELDS = ("queue", "active")
+TRACKED_MUTATORS = ("append", "pop", "remove")
+EXTERNAL_MUTATORS = ("submit",)
+UNTRACKED_FIELDS = {"_version": "the version counter itself"}
+
+
+class State:
+    def __init__(self):
+        self.queue = []
+        self.active = {}
+        self._version = 0
+
+    def _touch(self):
+        self._version += 1
+
+    def submit(self, item):
+        self.queue.append(item)  # EXPECT: mutation

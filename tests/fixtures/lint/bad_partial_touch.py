@@ -1,0 +1,27 @@
+"""schedlint corpus: a touch that covers only one branch.
+
+The mutation happens unconditionally but the `_touch()` sits under a
+condition — there EXISTS a path (item <= 0) through the mutation that
+reaches the exit untouched.  Expected: flagged by the mutation checker.
+"""
+
+SCHEDLINT_SIM = True
+TRACKED_CLASS = "State"
+TRACKED_FIELDS = ("queue",)
+TRACKED_MUTATORS = ("append", "pop")
+EXTERNAL_MUTATORS = ("submit",)
+UNTRACKED_FIELDS = {"_version": "the version counter itself"}
+
+
+class State:
+    def __init__(self):
+        self.queue = []
+        self._version = 0
+
+    def _touch(self):
+        self._version += 1
+
+    def submit(self, item):
+        self.queue.append(item)  # EXPECT: mutation
+        if item > 0:
+            self._touch()

@@ -1,0 +1,27 @@
+"""schedlint corpus: deterministic use of sets and ordering — zero
+findings.  Membership tests, `sorted()` iteration, `len`/`min`/`max`/
+`any`/`all`, and dict iteration are all fine.
+"""
+
+SCHEDLINT_SIM = True
+
+
+def place(pending, busy):
+    free = {i for i in range(8) if i not in busy}
+    if not free:
+        return []
+    out = []
+    for i in sorted(free):            # sorted: deterministic
+        if len(out) >= min(len(pending), max(1, len(free) // 2)):
+            break
+        out.append(i)
+    return out
+
+
+def ready(queues):
+    # dict iteration is insertion-ordered: fine
+    return [r for q in queues.values() for r in q if r > 0]
+
+
+def any_free(busy, n):
+    return any(i not in busy for i in range(n))

@@ -1,0 +1,52 @@
+"""schedlint corpus: a memo whose key covers everything it reads —
+zero findings.  Includes a folded token with a written justification
+(the `recent` flag is resampled into `last_seen` before every query)
+and safe reads of static configuration.
+"""
+
+SCHEDLINT_SIM = True
+SCHEDLINT_TYPES = {"Planner.cost": "CostModel", "Planner.shell": "State"}
+SCHEDLINT_VERSIONED = {"CostModel.version": "cost",
+                       "CostModel.per_chunk": "cost",
+                       "State.depth": "state",
+                       "State._version": "state",
+                       "State.last_seen": "reserve",
+                       "Planner.scale": None}
+MEMO_CONTRACTS = (
+    {"name": "load_ms", "func": "Planner.load_ms",
+     "cache": "_load_cache", "key": ("state", "cost"),
+     "folded": {"reserve": "last_seen is refreshed from the event "
+                           "loop before every query, so its changes "
+                           "always arrive with a state bump"}},
+)
+
+
+class CostModel:
+    def __init__(self):
+        self.version = 0
+        self.per_chunk = 1.0
+
+
+class State:
+    def __init__(self):
+        self.depth = 0
+        self.last_seen = 0.0
+        self._version = 0
+
+
+class Planner:
+    def __init__(self, shell, cost):
+        self.shell = shell
+        self.cost = cost
+        self.scale = 2.0              # static configuration
+        self._load_cache = {}
+
+    def load_ms(self):
+        key = (self.shell._version, self.cost.version)
+        hit = self._load_cache.get(key)
+        if hit is not None:
+            return hit
+        out = (self.shell.depth * self.cost.per_chunk * self.scale
+               + self.shell.last_seen)
+        self._load_cache[key] = out
+        return out

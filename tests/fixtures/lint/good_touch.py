@@ -1,0 +1,63 @@
+"""schedlint corpus: legitimate touch discipline — zero findings.
+
+Covers the idioms the real scheduler uses: bump-inside-the-placement-
+loop covering mutations before *and* after it on the same path, a
+non-touching private helper covered by every public caller, branchy
+code where every mutating path touches, and mutations of declared
+untracked fields.
+"""
+
+SCHEDLINT_SIM = True
+TRACKED_CLASS = "State"
+TRACKED_FIELDS = ("queue", "active", "counter")
+TRACKED_MUTATORS = ("append", "pop", "remove")
+EXTERNAL_MUTATORS = ("submit", "complete")
+UNTRACKED_FIELDS = {"_version": "the version counter itself",
+                    "on_change": "wiring, not scheduling state",
+                    "history": "reporting only, never read back"}
+
+
+class State:
+    def __init__(self):
+        self.queue = []
+        self.active = {}
+        self.counter = 0
+        self.history = []
+        self._version = 0
+        self.on_change = None
+
+    def _touch(self):
+        self._version += 1
+        if self.on_change is not None:
+            self.on_change()
+
+    def _bump(self):
+        self._version += 1
+
+    def submit(self, item):
+        self.queue.append(item)
+        self.history.append(item)     # untracked: no bump required
+        self._touch()
+
+    def complete(self, key):
+        if key not in self.active:
+            return False              # no mutation on this path
+        self.active.pop(key)
+        self._retire(key)
+        self._touch()
+        return True
+
+    def _retire(self, key):
+        # helper mutates without touching: covered by its callers
+        self.counter -= 1
+        if key in self.queue:
+            self.queue.remove(key)
+
+    def schedule(self):
+        placed = []
+        while self.queue:
+            item = self.queue.pop()
+            self._bump()              # covers the whole iteration
+            self.active[item] = True  # after the bump, same path
+            placed.append(item)
+        return placed

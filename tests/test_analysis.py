@@ -1,0 +1,199 @@
+"""schedlint + runtime sanitizer coverage.
+
+Three layers:
+
+  - **corpus**: every seeded-violation fixture under
+    tests/fixtures/lint/ is flagged on exactly its `# EXPECT: <checker>`
+    lines, and every known-good fixture produces zero findings (no
+    false positives);
+  - **repo**: `python -m repro.analysis` is clean on the real core —
+    the same gate CI runs;
+  - **sanitizer**: a silent (touch-less) mutation of tracked state is
+    (a) demonstrably a real divergence — the incremental fabric keeps
+    treating the shell as a fixpoint while `full_reschedule` places the
+    smuggled work — and (b) caught by `REPRO_SANITIZE=1` at the next
+    event, while legitimate API-mutating runs stay byte-identical to an
+    unsanitized run.
+
+Pure-stdlib: no jax, no hypothesis.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+
+import pytest
+
+from repro.analysis import analyze
+from repro.analysis import sanitizer
+from repro.analysis.__main__ import main as schedlint_main
+from repro.core import Fabric, PolicyConfig
+
+from golden_traces import build_registry, load_fixture, run_trace, \
+    to_jsonable
+
+LINT_DIR = pathlib.Path(__file__).parent / "fixtures" / "lint"
+_EXPECT_RE = re.compile(r"#\s*EXPECT:\s*(\w+)")
+
+
+def _expected(path: pathlib.Path) -> set[tuple[int, str]]:
+    out = set()
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        m = _EXPECT_RE.search(line)
+        if m:
+            out.add((i, m.group(1)))
+    return out
+
+
+# -- corpus -------------------------------------------------------------------
+
+BAD = sorted(LINT_DIR.glob("bad_*.py"))
+GOOD = sorted(LINT_DIR.glob("good_*.py"))
+
+
+def test_corpus_exists():
+    assert len(BAD) >= 5 and len(GOOD) >= 3
+
+
+@pytest.mark.parametrize("path", BAD, ids=lambda p: p.stem)
+def test_bad_fixture_fully_flagged(path):
+    """Every seeded violation is found — at its exact line, by the
+    expected checker — and nothing else in the file is flagged."""
+    expected = _expected(path)
+    assert expected, f"{path.name} declares no EXPECT markers"
+    findings = analyze([str(path)])
+    got = {(f.line, f.checker) for f in findings}
+    assert got == expected, (
+        f"{path.name}: expected {sorted(expected)}, got "
+        f"{sorted(got)}:\n" + "\n".join(str(f) for f in findings))
+
+
+@pytest.mark.parametrize("path", GOOD, ids=lambda p: p.stem)
+def test_good_fixture_zero_false_positives(path):
+    findings = analyze([str(path)])
+    assert not findings, "\n".join(str(f) for f in findings)
+
+
+def test_pragma_without_reason_is_a_finding(tmp_path):
+    p = tmp_path / "lazy_pragma.py"
+    p.write_text(
+        "SCHEDLINT_SIM = True\n"
+        "import time  # schedlint: ok(determinism)\n")
+    findings = analyze([str(p)])
+    assert any("justification" in f.message for f in findings)
+
+
+# -- the real repo ------------------------------------------------------------
+
+def test_repo_is_clean():
+    assert schedlint_main([]) == 0
+
+
+def test_core_contract_declarations_present():
+    """The checkers only bite if the contracts stay declared."""
+    core = pathlib.Path(__file__).parents[1] / "src" / "repro" / "core"
+    assert "TRACKED_FIELDS" in (core / "scheduler.py").read_text()
+    assert "MEMO_CONTRACTS" in (core / "fabric.py").read_text()
+    assert "MEMO_CONTRACTS" in (core / "arrivals.py").read_text()
+    assert "CKPT_MUTATORS" in (core / "checkpoint.py").read_text()
+
+
+# -- runtime sanitizer --------------------------------------------------------
+
+def _small_fabric():
+    pol = PolicyConfig(preemptive=True, steal=True,
+                       starvation_bound_ms=50.0)
+    return Fabric({"a": (2, 1.0), "b": (2, 1.0)}, build_registry(), pol)
+
+
+def _smuggle_chunk(fab, shell):
+    """Mutate tracked state the way a buggy executor would: through
+    aliases, bypassing every SchedulerState method and `_touch`."""
+    st = fab.states[shell]
+    req = next(iter(st.requests.values()))
+    req._chunks.append(req.n_chunks)
+    req.n_chunks += 1
+    st._pending_n += 1
+
+
+def test_silent_mutation_diverges_incremental_from_full():
+    """The failure mode the whole PR exists to prevent, demonstrated:
+    after a touch-less mutation the incremental fabric sees a fixpoint
+    and schedules nothing, while the reschedule-everything reference
+    places the smuggled chunk."""
+    outs = {}
+    for full in (False, True):
+        # single shell, no stealing: the smuggled chunk only exists in
+        # the shell's request, so the cross-shell steal path (which
+        # maps chunk ids through the fabric's submission map) must not
+        # run — the divergence is purely place-locally vs fixpoint.
+        # elastic + 4 slots so the smuggled chunk is eligible (chunk 0
+        # is still outstanding) and a free range exists for it.
+        fab = Fabric({"a": (4, 1.0)}, build_registry(),
+                     PolicyConfig(elastic=True))
+        fab.submit("t", "batch", 1, now=0.0)
+        fab.schedule(0.0)             # place the only chunk
+        fab.schedule(0.5)             # settle: drain the dispatch dirty
+        _smuggle_chunk(fab, "a")
+        fab.full_reschedule = full
+        outs[full] = fab.schedule(1.0)
+    assert outs[True] and not outs[False], (
+        "expected full_reschedule to place the smuggled chunk and the "
+        "incremental core to miss it")
+
+
+def test_sanitizer_catches_silent_mutation(monkeypatch):
+    monkeypatch.setattr(sanitizer, "SANITIZE", True)
+    fab = _small_fabric()
+    fab.submit("t", "batch", 1, now=0.0)
+    fab.schedule(0.0)
+    _smuggle_chunk(fab, "a")
+    with pytest.raises(sanitizer.SanitizerError):
+        fab.schedule(1.0)
+
+
+def test_sanitizer_checks_clean_shells_too(monkeypatch):
+    """The elided (clean) shells are exactly the ones a silent mutation
+    corrupts — the fabric must check every shell on every event, not
+    just the dirty set."""
+    monkeypatch.setattr(sanitizer, "SANITIZE", True)
+    fab = _small_fabric()
+    fab.submit("t", "batch", 1, now=0.0, affinity="a")
+    fab.submit("u", "inter", 1, now=0.0, affinity="b")
+    fab.schedule(0.0)
+    fab.schedule(1.0)                 # both shells now clean
+    _smuggle_chunk(fab, "b")          # corrupt a shell not re-dirtied
+    with pytest.raises(sanitizer.SanitizerError):
+        fab.schedule(2.0)
+
+
+def test_sanitizer_accepts_legitimate_mutations(monkeypatch):
+    """A full feature-dense golden trace under the sanitizer: every
+    API-path mutation passes the checks and the result stays
+    byte-identical to the committed unsanitized fixture."""
+    monkeypatch.setattr(sanitizer, "SANITIZE", True)
+    res = run_trace("hetero_steal_ckpt")
+    assert to_jsonable(res) == load_fixture("hetero_steal_ckpt")
+
+
+def test_empty_take_steal_still_touches():
+    """Regression for the schedlint mutation finding this PR fixed:
+    `steal_pending`/`steal_front` used to touch only `if take` — but
+    `_pop_finished` can mutate the tenant queue even when the take is
+    empty.  The touch is now unconditional: an empty take bumps the
+    version and re-dirties the shell (a no-op reschedule), never a
+    silent skip."""
+    fab = _small_fabric()
+    fab.submit("t", "batch", 2, now=0.0)
+    fab.schedule(0.0)
+    st = fab.states[next(n for n, s in fab.states.items() if s.requests)]
+    rid = next(iter(st.requests))
+    dirtied = []
+    st.on_change, prev = (lambda: dirtied.append(1)), st.on_change
+    try:
+        v0 = st._version
+        assert st.steal_pending(rid, 0) == []
+        assert st._version > v0
+        assert dirtied
+    finally:
+        st.on_change = prev
