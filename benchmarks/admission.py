@@ -36,12 +36,10 @@ verdict) unless `--out ''`.
 from __future__ import annotations
 
 import argparse
-import json
 import random
 import sys
-from pathlib import Path
 
-from benchmarks.common import row
+from benchmarks.common import row, write_bench
 from repro.core import Fabric, ImplAlt, ModuleDescriptor, PolicyConfig, \
     QoSContract, Registry, SimJob, simulate
 
@@ -171,27 +169,24 @@ def main(argv: list[str] | None = None) -> int:
         f" (bound <={GATE_ADMIT}x), naive {nai_x:.2f}x "
         f"(bound >{GATE_NAIVE:g}x) -> {'PASS' if ok else 'FAIL'}")
 
-    if args.out:
-        Path(args.out).write_text(json.dumps({
-            "bench": "admission",
-            "trace": {"svc_gap_ms": SVC_GAP_MS,
-                      "svc_service_ms": SVC_SERVICE,
-                      "bg_chunks": BG_CHUNKS,
-                      "bg_service_ms": BG_SERVICE,
-                      "horizon_ms": horizon, "seed": 11,
-                      "quick": args.quick},
-            "contract": {"tenant": "svc",
-                         "rate_per_s": 1000.0 / SVC_GAP_MS,
-                         "deadline_ms": 60.0, "percentile": 0.95},
-            "sweep": sweep,
-            "uncontended_p95_ms": base,
-            "gate": {"factor": GATE_FACTOR,
-                     "admitted_bound_x": GATE_ADMIT,
-                     "naive_bound_x": GATE_NAIVE,
-                     "admitted_x": round(adm_x, 3),
-                     "naive_x": round(nai_x, 3),
-                     "pass": ok},
-        }, indent=2) + "\n")
+    write_bench(args.out, 7, "admission", metrics={
+        "trace": {"svc_gap_ms": SVC_GAP_MS,
+                  "svc_service_ms": SVC_SERVICE,
+                  "bg_chunks": BG_CHUNKS,
+                  "bg_service_ms": BG_SERVICE,
+                  "horizon_ms": horizon, "seed": 11,
+                  "quick": args.quick},
+        "contract": {"tenant": "svc",
+                     "rate_per_s": 1000.0 / SVC_GAP_MS,
+                     "deadline_ms": 60.0, "percentile": 0.95},
+        "sweep": sweep,
+        "uncontended_p95_ms": base,
+    }, gates={"factor": GATE_FACTOR,
+              "admitted_bound_x": GATE_ADMIT,
+              "naive_bound_x": GATE_NAIVE,
+              "admitted_x": round(adm_x, 3),
+              "naive_x": round(nai_x, 3),
+              "pass": ok})
 
     if not args.no_gate and not ok:
         print(f"FAIL: at {GATE_FACTOR:g}x overload admitted-contract "

@@ -5,6 +5,7 @@ utilization, ...).
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -18,6 +19,29 @@ def row(name: str, us_per_call: float, derived) -> str:
     line = f"{name},{us_per_call:.3f},{derived}"
     print(line, flush=True)
     return line
+
+
+def write_bench(out: str, pr: int, bench: str, metrics: dict,
+                gates: dict | None = None) -> None:
+    """Write the standard `BENCH_<pr>.json` artifact.
+
+    One schema across every benchmark so the perf trajectory stays
+    machine-readable PR over PR:
+
+        {"pr": N, "bench": "<name>",
+         "metrics": {...measurements...},
+         "gates": {...bounds and pass/fail...}}
+
+    `out` falsy (CI smoke runs pass `--out ''`) writes nothing.
+    """
+    if not out:
+        return
+    payload = {"pr": pr, "bench": bench, "metrics": metrics,
+               "gates": gates or {}}
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    print(f"wrote {out}", flush=True)
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:

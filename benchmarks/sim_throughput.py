@@ -41,13 +41,11 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import random
 import sys
 import time
-from pathlib import Path
 
-from benchmarks.common import row
+from benchmarks.common import row, write_bench
 from repro.core import Fabric, ImplAlt, ModuleDescriptor, PolicyConfig, \
     Registry, SimJob, simulate
 
@@ -164,26 +162,23 @@ def main(argv: list[str] | None = None) -> int:
         f"stolen={res_inc.stolen_chunks} "
         f"ckpt_restores={res_inc.ckpt_restores} identical=True")
 
-    if args.out:
-        Path(args.out).write_text(json.dumps({
-            "bench": "sim_throughput",
-            "trace": {"n_shells": n_shells, "slots_per_shell": 4,
-                      "speeds": list(SPEEDS), "n_jobs": n_jobs,
-                      "n_tenants": 16, "seed": 7, "gap_ms": gap_ms,
-                      "quick": args.quick},
-            "events": ev,
-            "incremental": {"wall_s": round(t_inc, 4),
-                            "events_per_sec": round(eps_inc, 1)},
-            "full_reschedule": {"wall_s": round(t_full, 4),
-                                "events_per_sec": round(eps_full, 1)},
-            "speedup": round(speedup, 3),
-            "gate": GATE,
-            "identical_results": True,
-            "makespan_ms": round(res_inc.makespan, 3),
-            "preemptions": res_inc.preemptions,
-            "stolen_chunks": res_inc.stolen_chunks,
-            "ckpt_restores": res_inc.ckpt_restores,
-        }, indent=2) + "\n")
+    write_bench(args.out, 6, "sim_throughput", metrics={
+        "trace": {"n_shells": n_shells, "slots_per_shell": 4,
+                  "speeds": list(SPEEDS), "n_jobs": n_jobs,
+                  "n_tenants": 16, "seed": 7, "gap_ms": gap_ms,
+                  "quick": args.quick},
+        "events": ev,
+        "incremental": {"wall_s": round(t_inc, 4),
+                        "events_per_sec": round(eps_inc, 1)},
+        "full_reschedule": {"wall_s": round(t_full, 4),
+                            "events_per_sec": round(eps_full, 1)},
+        "identical_results": True,
+        "makespan_ms": round(res_inc.makespan, 3),
+        "preemptions": res_inc.preemptions,
+        "stolen_chunks": res_inc.stolen_chunks,
+        "ckpt_restores": res_inc.ckpt_restores,
+    }, gates={"speedup_min": GATE, "speedup": round(speedup, 3),
+              "pass": speedup >= GATE})
 
     if not args.no_gate and speedup < GATE:
         print(f"FAIL: incremental core speedup {speedup:.2f}x < "

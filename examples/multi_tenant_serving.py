@@ -38,6 +38,7 @@ import numpy as np                                            # noqa: E402
 from repro.core import Daemon, FabricDescriptor, ImplAlt, \
     ModuleDescriptor, PolicyConfig, QoSContract, Shell, \
     default_registry, uniform_shell                           # noqa: E402
+from repro.obs import FlightRecorder, export_chrome_trace     # noqa: E402
 
 
 def build_shells(reg):
@@ -67,8 +68,13 @@ def main():
     # is latency-sensitive (priority 3 + deadline); alice/bob run as
     # best-effort batch work whose chunks may be evicted — keeping their
     # progress — requeued, resumed, or stolen by an idle shell
+    # flight recorder (PR 9): full event tracing plus 100 ms gauge
+    # sampling over the live daemon — the whole serving session below
+    # lands in `daemon.metrics["obs"]` and a Perfetto-openable trace
+    recorder = FlightRecorder(trace=True, sample_every_ms=100.0)
     daemon = Daemon(shells, reg,
-                    PolicyConfig(preemptive=True, ckpt=True))
+                    PolicyConfig(preemptive=True, ckpt=True),
+                    obs=recorder)
     fab = reg.fabric("example")
     print(f"fabric: {fab.name} -> "
           f"{[(n, len(s.slots)) for n, s in shells.items()]}; "
@@ -147,6 +153,24 @@ def main():
           f"degraded={e.get('degraded', 0)} "
           f"rejected={e.get('rejected', 0)} attainment="
           f"{att if att is None else format(att, '.2f')}")
+
+    # the flight recorder saw the whole session: counters snapshot +
+    # a chrome://tracing / Perfetto trace of every chunk span
+    obs = daemon.metrics["obs"]
+    oc = obs["counters"]
+    print(f"obs  : submitted={oc['submitted']} "
+          f"(admitted={oc['admitted']} degraded={oc['degraded']} "
+          f"rejected={oc['rejected']}) "
+          f"chunks={oc['chunks_started']}/{oc['chunks_completed']}"
+          f"/{oc['chunks_preempted']} (start/done/evict) "
+          f"steals={oc['steal_hits']}/{oc['steal_probes']} "
+          f"samples={len(obs.get('samples', []))}")
+    print(f"svc  : " + " ".join(
+        f"{t}={ms:.0f}slot-ms"
+        for t, ms in sorted(obs["tenant_service_ms"].items())))
+    export_chrome_trace(recorder.tracer, "trace.json")
+    print(f"trace: {len(recorder.tracer.events)} events -> trace.json "
+          f"(open at https://ui.perfetto.dev)")
     daemon.shutdown()
 
 

@@ -93,6 +93,9 @@ VERSIONED: dict = {
     ("SchedulerState", "_observe_arrivals"): None,
     ("SchedulerState", "transfer_of"): None,
     ("SchedulerState", "on_change"): None,
+    # observability callback (repro.obs): fired on reserve changes,
+    # never read by scheduling decisions
+    ("SchedulerState", "on_reserve"): None,
     ("SchedulerState", "RESERVE_HYSTERESIS"): None,
     ("CostModel", "_est"): "cost",
     ("CostModel", "version"): "cost",
@@ -151,6 +154,9 @@ VERSIONED: dict = {
     ("Fabric", "_moved"): None,
     ("Fabric", "_sub_transfer"): None,
     ("Fabric", "_now"): "now",
+    # flight recorder head (repro.obs): write-only telemetry from the
+    # fabric's point of view — hooks observe decisions, never make them
+    ("Fabric", "obs"): None,
     # FabricJob fields read on steal/dispatch paths are admission-time
     # constants; the mutable ones (done, subs) are only touched on
     # success paths that also touch the involved shells
@@ -206,6 +212,11 @@ DETERMINISM_ALLOWLIST: dict = {
         "numerics never feed back into scheduling decisions",
     ("zoo", "randomness"):
         "module zoo builds test inputs with seeded jax.random keys",
+    ("export", "wall-clock"):
+        "the Chrome-trace exporter (repro.obs.export) stamps the "
+        "capture time into the artifact's otherData for provenance; "
+        "it renders already-recorded events and nothing flows back "
+        "into scheduling (trace/recorder stay strict sim modules)",
 }
 
 # safe attribute reads not worth a VERSIONED entry (dunder/bookkeeping)

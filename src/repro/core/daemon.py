@@ -73,9 +73,14 @@ class JobHandle:
 
 class Daemon:
     def __init__(self, shell, registry: Registry,
-                 policy: PolicyConfig | None = None, max_workers: int = 8):
+                 policy: PolicyConfig | None = None, max_workers: int = 8,
+                 obs=None):
         """`shell`: a `Shell` (single-shell, seed behavior) or an ordered
-        `{name: Shell}` mapping (multi-shell fabric)."""
+        `{name: Shell}` mapping (multi-shell fabric).
+
+        `obs`: an optional `repro.obs.FlightRecorder` to attach to the
+        fabric (duck-typed — the daemon never imports repro.obs).  Its
+        event timestamps then run on the daemon's wall clock."""
         if isinstance(shell, dict):
             self.shells: dict[str, Shell] = dict(shell)
         else:
@@ -88,10 +93,16 @@ class Daemon:
         self.fabric = Fabric(
             {name: s.spec for name, s in self.shells.items()},
             registry, policy)
+        if obs is not None:
+            obs.attach(self.fabric)
         self._modules: dict[str, AccelModule] = {}
         self._placements: dict[tuple[str, int, int], Placement] = {}
         self._events: queue.Queue = queue.Queue()
-        self._lock = threading.Lock()
+        # reentrant: `metrics` (and its ckpt_stats/slo_stats/
+        # reserve_history aliases) snapshots under this lock, and
+        # callers driving the scheduler state directly may already
+        # hold it when they read stats
+        self._lock = threading.RLock()
         self._results: dict[int, list] = {}
         self._handles: dict[int, JobHandle] = {}
         self._cancelled: set[int] = set()     # aids of preempted assignments
@@ -113,20 +124,52 @@ class Daemon:
         return self.fabric.policy
 
     @property
+    def metrics(self) -> dict:
+        """The daemon's one metrics surface, snapshotted under the
+        scheduler lock so every block is from the same instant:
+
+        - ``daemon``: executor counters (reconfigurations, reuses,
+          chunks, preemptions, scheduling-pass timing);
+        - ``ckpt``: checkpoint counters when `PolicyConfig.ckpt` is on;
+        - ``slo``: per-tenant SLO attainment once any `QoSContract` is
+          registered;
+        - ``reserve_history``: per-shell effective-reservation trace
+          `[(t_ms, slots), ...]` recorded on change;
+        - ``obs``: the `FlightRecorder.snapshot()` payload when a
+          recorder was passed at construction (absent otherwise).
+
+        `ckpt_stats`/`slo_stats`/`reserve_history` are thin aliases of
+        the corresponding blocks."""
+        with self._lock:
+            fab = self.fabric
+            m = {
+                "daemon": dict(self.stats),
+                "ckpt": (dict(fab.ckpt.stats)
+                         if fab.ckpt is not None else {}),
+                "slo": (fab.slo.attainment()
+                        if fab.slo is not None else {}),
+                "reserve_history": {
+                    name: list(st.reserve_history)
+                    for name, st in fab.states.items()},
+            }
+            if fab.obs is not None:
+                m["obs"] = fab.obs.snapshot()
+            return m
+
+    @property
     def ckpt_stats(self) -> dict:
         """Checkpoint counters (saves/restores/migrations/dropped) when
-        `PolicyConfig.ckpt` is on; `{}` otherwise."""
-        return dict(self.fabric.ckpt.stats) \
-            if self.fabric.ckpt is not None else {}
+        `PolicyConfig.ckpt` is on; `{}` otherwise.  Thin alias of
+        ``metrics["ckpt"]``."""
+        return self.metrics["ckpt"]
 
     @property
     def slo_stats(self) -> dict:
         """Per-tenant SLO attainment snapshot (verdict counts,
         deadline-hit fraction, attainment history) once any
-        `QoSContract` is registered; `{}` otherwise."""
-        with self._lock:
-            return self.fabric.slo.attainment() \
-                if self.fabric.slo is not None else {}
+        `QoSContract` is registered; `{}` otherwise.  Thin alias of
+        ``metrics["slo"]``."""
+        return self.metrics["slo"]
 
     def register_contract(self, contract: QoSContract) -> None:
         """Attach a tenant's `QoSContract` to the fabric; every
@@ -140,10 +183,9 @@ class Daemon:
         """Per-shell effective-reservation trace `[(t_ms, slots), ...]`
         recorded on change — the adaptive reservation's sizing decisions
         (`PolicyConfig.reserve_mode == "adaptive"`, fed from the wall
-        clock at `submit`); static mode records its constant once."""
-        with self._lock:
-            return {name: list(st.reserve_history)
-                    for name, st in self.fabric.states.items()}
+        clock at `submit`); static mode records its constant once.
+        Thin alias of ``metrics["reserve_history"]``."""
+        return self.metrics["reserve_history"]
 
     # -- public API (paper Listings 4/5) --------------------------------------
 

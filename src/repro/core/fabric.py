@@ -273,6 +273,11 @@ class Fabric:
         # (the pre-refactor reschedule-everything core; equivalence
         # property tests and the throughput bench baseline drive it)
         self.full_reschedule = False
+        # observability head (repro.obs.FlightRecorder.attach sets it).
+        # None means detached: every hook below is a single attribute
+        # test, so the default path allocates nothing and stays
+        # byte-identical to the pre-recorder fabric
+        self.obs = None
 
     @classmethod
     def from_registry(cls, registry, name: str,
@@ -363,7 +368,11 @@ class Fabric:
         key = (st._version, self.cost.version)
         hit = self._backlog_cache.get(name)
         if hit is not None and hit[0] == key:
+            if self.obs is not None:
+                self.obs.backlog_hits += 1
             return hit[1]
+        if self.obs is not None:
+            self.obs.backlog_misses += 1
         total = 0.0
         for q in st.queues.values():
             for r in q:
@@ -480,6 +489,8 @@ class Fabric:
                                 verdict=verdict, rejected=True)
                 self.jobs[gid] = job
                 self._now = t_adm
+                if self.obs is not None:
+                    self.obs.on_submit(job, self._now)
                 return job
         min_fp = self._min_fp(module)
         if affinity is not None:
@@ -524,6 +535,8 @@ class Fabric:
             self.slo.note_admitted(tenant, module, n_chunks, priority,
                                    self._now,
                                    degraded=degraded_from is not None)
+        if self.obs is not None:
+            self.obs.on_submit(job, self._now)
         return job
 
     def abort(self, gid: int) -> None:
@@ -576,6 +589,8 @@ class Fabric:
         self._subs[(shell, job.gid)] = (
             job, {i: i for i in range(job.n_chunks)})
         self.stats["dispatched"] += 1
+        if self.obs is not None:
+            self.obs.on_dispatch(job, shell, self._now)
         return shell
 
     # -- work stealing --------------------------------------------------------
@@ -719,6 +734,8 @@ class Fabric:
             for i, c in enumerate(taken):
                 self.ckpt.rekey((req.rid, c), (sub.rid, i), shell=thief,
                                 capable=self.ckpt_capable[thief])
+        if self.obs is not None and mode == "resume":
+            self.obs.on_ckpt_migrate(victim, thief, sub.rid, now)
         self.stats["steals"] += 1
         self.stats["stolen_chunks"] += len(taken)
         return len(taken)
@@ -753,8 +770,16 @@ class Fabric:
                     fp = (self.states[victim]._version, tst._version,
                           self.cost.version, tst._reserve_last)
                     if self._steal_fail.get((victim, thief)) == fp:
+                        if self.obs is not None:
+                            # counted as a probe+miss at snapshot time,
+                            # never traced (see FlightRecorder)
+                            self.obs.steal_fp_skips += 1
                         continue
-                    if self._steal_from(victim, thief, now):
+                    taken = self._steal_from(victim, thief, now)
+                    if self.obs is not None:
+                        self.obs.on_steal(victim, thief, now,
+                                          hit=taken > 0, chunks=taken)
+                    if taken:
                         out.extend((thief, a) for a in
                                    tst.schedule(now, placed=placed[thief]))
                         moved = True
@@ -845,6 +870,8 @@ class Fabric:
                 # (same-pass churn guard); at the next event they are
                 # fair game, so the still-backlogged shell must re-run
                 self._dirty.add(name)
+        if self.obs is not None:
+            self.obs.on_pass(now, run, len(self.states), out)
         return out
 
     def complete(self, shell: str, a: Assignment,
@@ -855,6 +882,8 @@ class Fabric:
         if not st.complete(a, now=now):
             return False
         self._now = max(self._now, now)
+        if self.obs is not None:
+            self.obs.on_complete(shell, a, st.requests[a.rid].tenant, now)
         if st.requests[a.rid].finished:
             # a drained stolen sub-request schedules no more chunks;
             # release its transfer-price record (long-daemon hygiene)
@@ -884,5 +913,8 @@ class Fabric:
     def drain_preempted(self) -> list[tuple[str, Assignment]]:
         """Victim assignments since the last drain, tagged by shell; the
         executor must cancel them (chunks are already requeued)."""
-        return [(name, a) for name, st in self.states.items()
-                for a in st.drain_preempted()]
+        out = [(name, a) for name, st in self.states.items()
+               for a in st.drain_preempted()]
+        if self.obs is not None and out:
+            self.obs.on_preempted(out, self._now)
+        return out

@@ -309,6 +309,8 @@ UNTRACKED_FIELDS = {
                        "(a no-op pass), never late",
     "_shadow": "sanitizer snapshot (analysis/sanitizer.py)",
     "on_change": "constructor/executor wiring, not scheduling state",
+    "on_reserve": "observability wiring (repro.obs); fired on reserve "
+                  "changes, never read by scheduling decisions",
     "transfer_of": "constructor wiring (fabric hook)",
     "_rid": "constructor wiring (fabric-shared counter)",
     "_aid": "constructor wiring (fabric-shared counter)",
@@ -403,6 +405,10 @@ class SchedulerState:
         # dirty-shell set so direct state access — the daemon's legacy
         # single-shell path — still invalidates incremental scheduling
         self.on_change = None
+        # optional (now_ms, slots) callback fired when sample_reserve
+        # records a change — observability wiring (repro.obs), never
+        # read by any scheduling decision
+        self.on_reserve = None
         # REPRO_SANITIZE shadow snapshot (analysis/sanitizer.py):
         # (version, hash of tracked fields) at the last pass boundary
         self._shadow = None
@@ -668,6 +674,8 @@ class SchedulerState:
         if r != self._reserve_last:
             self.reserve_history.append((now, r))
             self._reserve_last = r
+            if self.on_reserve is not None:
+                self.on_reserve(now, r)
         return r
 
     def next_wake(self, now: float) -> float:

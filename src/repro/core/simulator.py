@@ -108,6 +108,11 @@ class SimResult:
     # deadline-hit fraction, bounded attainment history.  Empty — and
     # absent from golden serialisations — without registered contracts
     slo: dict = dataclasses.field(default_factory=dict)
+    # observability snapshot (repro.obs.FlightRecorder.snapshot):
+    # counters, per-tenant service-ms, sampled gauge history, scheduler
+    # self-profile.  Empty — and absent from golden serialisations —
+    # unless a recorder is attached to the fabric
+    metrics: dict = dataclasses.field(default_factory=dict)
 
     @property
     def mean_latency(self) -> float:
@@ -286,6 +291,8 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
                          if e[2] != "done" or e[3][1].aid not in stale]
             heapq.heapify(events)
             stale.clear()
+            if fabric.obs is not None:
+                fabric.obs.prof["heap_compactions"] += 1
         for shell, a in new:
             # stolen chunks also pay the priced cross-shell payload
             # movement — the latency the steal gate reasons about is
@@ -424,4 +431,6 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
                          name: list(st.reserve_history)
                          for name, st in fabric.states.items()},
                      slo=(fabric.slo.attainment()
-                          if fabric.slo is not None else {}))
+                          if fabric.slo is not None else {}),
+                     metrics=(fabric.obs.snapshot()
+                              if fabric.obs is not None else {}))

@@ -390,3 +390,15 @@ class AdmissionController:
                                 for h in self.history.get(tenant, [])]
             out[tenant] = entry
         return out
+
+    def totals(self) -> dict[str, int]:
+        """Verdict/outcome counters summed across every tenant — the
+        flat gauge surface the flight recorder (repro.obs) samples.
+        Conservation holds by construction (and is property-tested):
+        ``admitted + degraded + rejected == submitted``."""
+        out = {"submitted": 0, "admitted": 0, "degraded": 0,
+               "rejected": 0, "completed": 0, "hits": 0, "misses": 0}
+        for cnt in self.counts.values():
+            for k in out:
+                out[k] += cnt[k]
+        return out

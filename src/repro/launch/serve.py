@@ -77,6 +77,7 @@ class DaemonServeRun:
     preemptive: bool = True
     contract: bool = False          # register a QoSContract for "live"
     contract_rate_per_s: float = 50.0
+    trace_out: str = ""             # write a Chrome trace here (Perfetto)
     seed: int = 0
 
 
@@ -103,8 +104,14 @@ def serve_daemon(run: DaemonServeRun, log=print) -> dict:
     spec = uniform_shell(f"serve{n_dev}_s{n_dev}", (1, n_dev), n_dev)
     reg = default_registry()
     reg.register_shell(spec)
+    recorder = None
+    if run.trace_out:
+        from repro.obs import FlightRecorder
+        # wall-clock sampling: one gauge row per 100 ms of serving
+        recorder = FlightRecorder(sample_every_ms=100.0)
     daemon = Daemon(Shell(spec), reg,
-                    PolicyConfig(preemptive=run.preemptive))
+                    PolicyConfig(preemptive=run.preemptive),
+                    obs=recorder)
     contract = None
     if run.contract:
         # the degraded tier: same sobel kernel builder, declared at a
@@ -170,9 +177,20 @@ def serve_daemon(run: DaemonServeRun, log=print) -> dict:
             f"preemptions={s['preemptions']} "
             f"reconfigs={s['reconfigurations']} reuses={s['reuses']}"
             f"{extra}")
-        return {"live_p95_ms": live_p95, "slo_misses": misses,
-                "live_rejected": rejected, "wall_s": wall,
-                "stats": dict(s), "slo": slo}
+        result = {"live_p95_ms": live_p95, "slo_misses": misses,
+                  "live_rejected": rejected, "wall_s": wall,
+                  "stats": dict(s), "slo": slo,
+                  "metrics": daemon.metrics}
+        if recorder is not None:
+            from repro.obs import export_chrome_trace
+            export_chrome_trace(recorder.tracer, run.trace_out)
+            c = recorder.counts
+            log(f"[serve/daemon] obs: {len(recorder.tracer.events)} "
+                f"trace events -> {run.trace_out} (open in Perfetto); "
+                f"chunks started={c['chunks_started']} "
+                f"completed={c['chunks_completed']} "
+                f"preempted={c['chunks_preempted']}")
+        return result
     finally:
         daemon.shutdown()
 
@@ -194,13 +212,18 @@ def main():
                          "(admission screening + attainment ledger)")
     ap.add_argument("--contract-rate", type=float, default=50.0,
                     help="contract target arrival rate (jobs/s)")
+    ap.add_argument("--trace-out", default="",
+                    help="with --daemon: attach the flight recorder and "
+                         "write a Chrome trace JSON here (open in "
+                         "Perfetto)")
     args = ap.parse_args()
     if args.daemon:
         serve_daemon(DaemonServeRun(priority_hi=args.priority_hi,
                                     deadline_ms=args.deadline_ms,
                                     preemptive=not args.no_preempt,
                                     contract=args.contract,
-                                    contract_rate_per_s=args.contract_rate))
+                                    contract_rate_per_s=args.contract_rate,
+                                    trace_out=args.trace_out))
         return
     serve(ServeRun(arch=args.arch, batch=args.batch,
                    prompt_len=args.prompt_len,

@@ -193,13 +193,23 @@ TRACES = {
 }
 
 
-def run_trace(name: str):
-    """Build the trace fresh and simulate it; returns the SimResult."""
+def run_trace(name: str, obs=None):
+    """Build the trace fresh and simulate it; returns the SimResult.
+
+    `obs`: an optional `repro.obs.FlightRecorder` to attach before
+    simulating — the byte-identity suite uses it to pin down that an
+    attached recorder never changes scheduling outputs."""
     built = TRACES[name]()
     if len(built) == 4:                   # bare-slot-count seed form
         reg, spec, jobs, pol = built
-        return simulate(reg, spec, jobs, pol)
+        if obs is None:
+            return simulate(reg, spec, jobs, pol)
+        fab = Fabric({"shell0": spec}, reg, pol)   # _as_fabric's shape
+        obs.attach(fab)
+        return simulate(reg, fab, jobs)
     reg, fab, jobs = built
+    if obs is not None:
+        obs.attach(fab)
     return simulate(reg, fab, jobs)
 
 
@@ -216,6 +226,10 @@ def to_jsonable(res) -> dict:
         # contracts off: serialise exactly the pre-SLO shape, so the
         # PR 6 fixtures (and any future no-contract fixture) stay valid
         d.pop("slo")
+    if not d["metrics"]:
+        # likewise: no flight recorder attached (repro.obs) means the
+        # pre-observability serialisation, byte-for-byte
+        d.pop("metrics")
     return json.loads(json.dumps(d, sort_keys=True))
 
 
