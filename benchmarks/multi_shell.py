@@ -38,9 +38,10 @@ discard more slot-time than the lossy baseline).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 
-from benchmarks.common import row
+from benchmarks.common import row, write_bench
 from repro.core import Fabric, ImplAlt, ModuleDescriptor, PolicyConfig, \
     Registry, SimJob, simulate
 
@@ -91,7 +92,10 @@ def hetero_trace(n_jobs: int) -> list[SimJob]:
             for i in range(n_jobs)]
 
 
-def main(quick: bool = False) -> list[str]:
+def main(quick: bool = False, out: str = "") -> list[str]:
+    """`out` names the BENCH_2.json artifact ('' disables, the
+    programmatic default — benchmarks/run.py must not drop artifacts in
+    the caller's cwd)."""
     reg = _registry()
     n_heavy = 3 if quick else 10
     rows = []
@@ -247,8 +251,40 @@ def main(quick: bool = False) -> list[str]:
               f"lossy baseline ({ck['on'].discarded_ms:.0f} vs "
               f"{ck['off'].discarded_ms:.0f} ms)", file=sys.stderr)
         sys.exit(1)
+
+    # only reached with every gate satisfied (failures exited above)
+    write_bench(out, 2, "multi_shell", metrics={
+        "trace": {"n_heavy": n_heavy, "n_loc_jobs": n_jobs,
+                  "n_hetero_jobs": n_het, "quick": quick},
+        "skew": {"makespan_ms": {n: round(r.makespan, 3)
+                                 for n, r in res.items()},
+                 "stolen_chunks": res["steal"].stolen_chunks},
+        "locality": {"reconfigs": loc.reconfigurations,
+                     "load_only_reconfigs": noloc.reconfigurations},
+        "hetero": {"makespan_ms": {n: round(r.makespan, 3)
+                                   for n, r in het.items()},
+                   "priced_stolen": st_priced.stolen_chunks},
+        "ckpt": {"discarded_ms": {n: round(r.discarded_ms, 1)
+                                  for n, r in ck.items()},
+                 "reclaimed_ms": round(ck["on"].reclaimed_ms, 1),
+                 "migrations": ck["on"].ckpt_migrations},
+    }, gates={
+        "steal_speedup_min": 1.2, "steal_speedup": round(speedup, 3),
+        "hetero_speedup_min": 1.3,
+        "hetero_speedup": round(het_speedup, 3),
+        "locality_fewer_reconfigs": True,
+        "priced_steal_suppressed": True,
+        "ckpt_no_extra_discard": True,
+        "pass": True,
+    })
     return rows
 
 
 if __name__ == "__main__":
-    main(quick="--quick" in sys.argv[1:])
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller skew/hetero traces for CI smoke")
+    ap.add_argument("--out", default="BENCH_2.json",
+                    help="result JSON path ('' disables)")
+    args = ap.parse_args()
+    main(quick=args.quick, out=args.out)

@@ -1,0 +1,143 @@
+"""Congestion-aware stealing vs the scalar transfer model (PR 10 gate).
+
+One victim shell holds a deep pinned batch backlog on switch `sw_v`;
+six single-slot thief shells sit idle across a thin trunk on `sw_t`.
+Every steal moves its payload over the shared trunk, where concurrent
+transfers serialize and queue (`core/network.py` bounded store-and-
+forward links).
+
+The same trace replays twice on the *same physical topology* — both
+runs pay realized link occupancy; only the steal gate's belief differs:
+
+  - **aware** (`congestion_aware=True`, the default): the gate reads
+    load-aware estimates — queue wait counts, and a full trunk buffer
+    estimates `inf` — so thieves stagger their pulls and back off while
+    the trunk is saturated;
+  - **scalar** (`congestion_aware=False`): the gate believes the
+    zero-load figure, exactly what the old scalar `transfer_ms` model
+    believed.  All six thieves fire at once, their transfers stack up
+    on the trunk, and each stolen chunk pays a realized per-chunk price
+    far above the estimate the gate saw.
+
+Acceptance (CI): the congestion-aware run must beat the scalar-belief
+run by >= 1.2x makespan on the contended trace, and the scalar run must
+actually queue transfers (otherwise the trace stopped exercising
+contention and the comparison is vacuous).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import row, write_bench
+from repro.core import Fabric, FabricNetwork, ImplAlt, ModuleDescriptor, \
+    PolicyConfig, Registry, SimJob, simulate
+from repro.obs import FlightRecorder
+
+GATE = 1.2
+N_THIEVES = 6
+
+# thin trunk: one chunk of payload costs ~2.5x a batch chunk's service
+# time at zero load — still worth stealing against a deep victim
+# backlog, so the scalar belief fires every thief at once and their
+# pulls serialize into multiples of that on the two-deep trunk buffer
+TOPOLOGY = {
+    "switches": ["sw_v", "sw_t"],
+    "ports": {"victim": "sw_v",
+              **{f"thief{i}": "sw_t" for i in range(N_THIEVES)}},
+    "default_link": {"latency_ms": 0.5, "bw_ms": 0.5, "buffer": 8},
+    "links": [{"src": "sw_v", "dst": "sw_t",
+               "latency_ms": 2.0, "bw_ms": 100.0, "buffer": 2}],
+}
+
+
+def _registry() -> Registry:
+    reg = Registry()
+    reg.register_module(ModuleDescriptor(
+        name="batch", entrypoint="x:y",
+        impls=(ImplAlt("x1", 1, 40.0), ImplAlt("x2", 2, 22.0))))
+    return reg
+
+
+def contended_trace(n_jobs: int) -> list[SimJob]:
+    """Deep batch backlog pinned to the victim; the thieves' only work
+    is what they steal across the trunk."""
+    return [SimJob(2.0 * i, f"t{i % 3}", "batch", 6, affinity="victim")
+            for i in range(n_jobs)]
+
+
+def run_once(n_jobs: int, aware: bool):
+    reg = _registry()
+    shells = {"victim": (4, 1.0),
+              **{f"thief{i}": (1, 1.0) for i in range(N_THIEVES)}}
+    net = FabricNetwork.from_topology(
+        TOPOLOGY, shells)
+    fab = Fabric(shells, reg, PolicyConfig(congestion_aware=aware),
+                 network=net)
+    rec = FlightRecorder(trace=False).attach(fab)
+    res = simulate(reg, fab, contended_trace(n_jobs))
+    return res, rec.snapshot()
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller backlog for CI smoke (gate still on)")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; skip the >=1.2x acceptance exit")
+    ap.add_argument("--out", default="BENCH_10.json",
+                    help="result JSON path ('' disables)")
+    args = ap.parse_args(argv)
+
+    n_jobs = 8 if args.quick else 16
+    out = {}
+    for name, aware in (("aware", True), ("scalar", False)):
+        res, snap = run_once(n_jobs, aware)
+        c = snap["counters"]
+        out[name] = (res, c)
+        row(f"network_contention/{name}/makespan", res.makespan * 1e3,
+            f"stolen={res.stolen_chunks} "
+            f"steals={c['steal_hits']} "
+            f"queued={c['transfers_queued']} "
+            f"util={res.utilization:.3f}")
+
+    aware_res, aware_c = out["aware"]
+    scalar_res, scalar_c = out["scalar"]
+    speedup = scalar_res.makespan / max(aware_res.makespan, 1e-9)
+    row("network_contention/aware_vs_scalar", 0.0,
+        f"makespan_speedup={speedup:.2f}x (acceptance: >={GATE}x) "
+        f"stolen={aware_res.stolen_chunks}vs{scalar_res.stolen_chunks} "
+        f"queued={aware_c['transfers_queued']}"
+        f"vs{scalar_c['transfers_queued']}")
+
+    write_bench(args.out, 10, "network_contention", metrics={
+        "trace": {"n_jobs": n_jobs, "n_thieves": N_THIEVES,
+                  "quick": args.quick},
+        "aware": {"makespan_ms": round(aware_res.makespan, 3),
+                  "stolen_chunks": aware_res.stolen_chunks,
+                  "transfers_queued": aware_c["transfers_queued"]},
+        "scalar": {"makespan_ms": round(scalar_res.makespan, 3),
+                   "stolen_chunks": scalar_res.stolen_chunks,
+                   "transfers_queued": scalar_c["transfers_queued"]},
+    }, gates={"speedup_min": GATE, "speedup": round(speedup, 3),
+              "scalar_queued_min": 1,
+              "scalar_queued": scalar_c["transfers_queued"],
+              "pass": speedup >= GATE
+              and scalar_c["transfers_queued"] >= 1})
+
+    if args.no_gate:
+        return 0
+    if scalar_c["transfers_queued"] < 1:
+        print("FAIL: the scalar-belief run queued no transfers — the "
+              "trace no longer exercises trunk contention",
+              file=sys.stderr)
+        return 1
+    if speedup < GATE:
+        print(f"FAIL: congestion-aware stealing speedup {speedup:.2f}x "
+              f"< {GATE}x over the scalar belief", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -57,10 +57,11 @@ everywhere must trail adaptive goodput by at least `GOODPUT_MARGIN`.
 """
 from __future__ import annotations
 
+import argparse
 import random
 import sys
 
-from benchmarks.common import row
+from benchmarks.common import row, write_bench
 from repro.core import ImplAlt, ModuleDescriptor, PolicyConfig, Registry, \
     SimJob, simulate
 from repro.core.simulator import p95
@@ -181,11 +182,12 @@ def _mean_reserve(res, bounds) -> list[float]:
     return out
 
 
-def adaptive_section(gate: bool = False) -> list[str]:
+def adaptive_section(gate: bool = False) -> tuple[list[str], dict]:
     """Predictive-reservation rows on the drifting-rate trace; with
     `gate`, enforce the acceptance bounds (exits non-zero on failure).
-    Runs at full size even under --quick: one simulation is ~0.1 s and
-    the per-phase p95s need their sample counts."""
+    Returns (csv rows, metrics for the BENCH artifact).  Runs at full
+    size even under --quick: one simulation is ~0.1 s and the per-phase
+    p95s need their sample counts."""
     reg = _registry()
     jobs, bounds = drifting_trace(random.Random(2))
     kw = {"starvation_bound_ms": STARVATION_BOUND_MS,
@@ -262,7 +264,11 @@ def adaptive_section(gate: bool = False) -> list[str]:
             sys.exit(1)
     rows.append(row("themis/drift/adaptive_vs_static", 0.0,
                     "; ".join(summary)))
-    return rows
+    metrics = {name: {"p95_phases_ms": [round(p, 3) for p in ps],
+                      "goodput": round(res[name].useful_utilization, 4)}
+               for name, ps in phases.items()}
+    metrics["static_losses"] = summary
+    return rows, metrics
 
 
 def _policies() -> list[tuple[str, PolicyConfig]]:
@@ -277,19 +283,25 @@ def _policies() -> list[tuple[str, PolicyConfig]]:
 
 
 def main(quick: bool = False, ckpt_gate: bool = False,
-         adaptive_gate: bool = False) -> list[str]:
+         adaptive_gate: bool = False, out: str = "") -> list[str]:
     """`quick` shrinks the rate sweep for the CI benchmarks-smoke job
     (the drifting-rate section always runs full size — it is cheap and
     its per-phase p95s need their sample counts); `ckpt_gate` enforces
     the >= 50% reclaim acceptance bound at the finest interactive rate;
     `adaptive_gate` enforces the predictive-reservation bounds on the
-    drifting trace (either gate exits non-zero on failure)."""
+    drifting trace (either gate exits non-zero on failure); `out` names
+    the BENCH_4.json artifact ('' disables, the programmatic default —
+    benchmarks/run.py must not drop artifacts in the caller's cwd)."""
     reg = _registry()
     horizon = 400.0 if quick else HORIZON_MS
     periods = (40.0,) if quick else (40.0, 20.0, 10.0)
     if ckpt_gate and 10.0 not in periods:
         periods = periods + (10.0,)     # the gate needs the hot point
     rows = []
+    metrics: dict = {"trace": {"slots": SLOTS, "horizon_ms": horizon,
+                               "periods_ms": list(periods),
+                               "quick": quick}}
+    gate_reclaim = gate_p95 = None
     for period in periods:
         jobs = trace(period, random.Random(0), horizon_ms=horizon)
         res = {}
@@ -352,6 +364,19 @@ def main(quick: bool = False, ckpt_gate: bool = False,
             f"util_delta="
             f"{res['reserve'].utilization - res['coop'].utilization:+.3f} "
             f"preemptions={res['reserve'].preemptions}"))
+        metrics[f"ia{period:g}"] = {
+            "hi_p95_ms": {n: round(
+                r.p95_latency(priority=PRIORITY_HI), 3)
+                for n, r in res.items()},
+            "goodput": {n: round(r.useful_utilization, 4)
+                        for n, r in res.items()},
+            "preempt_p95_speedup": round(speedup, 3),
+            "reclaim_frac": round(reclaim_frac, 4),
+            "discarded_ms": {"preempt": round(d_pre, 1),
+                             "preempt+ckpt": round(d_ck, 1)},
+        }
+        if period == 10.0:
+            gate_reclaim, gate_p95 = reclaim_frac, (p95_pre, p95_ck)
         if ckpt_gate and period == 10.0:
             if reclaim_frac < RECLAIM_GATE:
                 print(f"FAIL: checkpointing reclaimed only "
@@ -363,11 +388,35 @@ def main(quick: bool = False, ckpt_gate: bool = False,
                       f"({p95_pre:.2f} -> {p95_ck:.2f} ms)",
                       file=sys.stderr)
                 sys.exit(1)
-    rows.extend(adaptive_section(gate=adaptive_gate))
+    drift_rows, drift_metrics = adaptive_section(gate=adaptive_gate)
+    rows.extend(drift_rows)
+    metrics["drift"] = drift_metrics
+    # only reached with every enforced gate satisfied (failures exited
+    # above), so the artifact records which bounds were actually held
+    write_bench(out, 4, "preemption", metrics, gates={
+        "reclaim_min": RECLAIM_GATE,
+        "reclaim_frac_ia10": (round(gate_reclaim, 4)
+                              if gate_reclaim is not None else None),
+        "ckpt_p95_ia10_ms": ([round(p, 3) for p in gate_p95]
+                             if gate_p95 is not None else None),
+        "adapt_envelope": ADAPT_ENVELOPE,
+        "goodput_margin": GOODPUT_MARGIN,
+        "enforced": {"ckpt": ckpt_gate, "adaptive": adaptive_gate},
+        "pass": True,
+    })
     return rows
 
 
 if __name__ == "__main__":
-    main(quick="--quick" in sys.argv[1:],
-         ckpt_gate="--ckpt" in sys.argv[1:],
-         adaptive_gate="--adaptive" in sys.argv[1:])
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="shrink the rate sweep for CI smoke")
+    ap.add_argument("--ckpt", action="store_true",
+                    help="enforce the checkpoint reclaim gate")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="enforce the predictive-reservation gate")
+    ap.add_argument("--out", default="BENCH_4.json",
+                    help="result JSON path ('' disables)")
+    args = ap.parse_args()
+    main(quick=args.quick, ckpt_gate=args.ckpt,
+         adaptive_gate=args.adaptive, out=args.out)

@@ -52,6 +52,12 @@ TYPE_HINTS: dict = {
     ("SchedulerState", "active"): "Assignment",
     ("ArrivalEstimator", "_classes"): "ClassStats",
     ("AdmissionController", "fabric"): "Fabric",
+    ("Fabric", "network"): "FabricNetwork",
+    ("FabricNetwork", "_links"): "Link",
+    ("FabricNetwork", "_routes"): "Link",
+    ("FabricNetwork", "_active"): "Transfer",
+    ("FabricNetwork", "_pending"): "Transfer",
+    ("Transfer", "route"): "Link",
 }
 
 # -- versioned-state tokens (memo checker) ------------------------------------
@@ -70,6 +76,9 @@ TYPE_HINTS: dict = {
 #   tenant_service — the fabric-shared service map; moves without any
 #              version, so no memo key can cover it: any read inside a
 #              cached region is a finding by construction
+#   net      — FabricNetwork.version: link occupancy (busy_until,
+#              inflight) moved by reserve/advance; constant (version 0)
+#              on the degenerate uniform topology
 #
 # None means "safe": static configuration, admission-time constants,
 # or self-invalidating caches.
@@ -172,6 +181,39 @@ VERSIONED: dict = {
     ("FabricJob", "subs"): "state",
     ("FabricJob", "done"): "state",
     ("FabricJob", "failed"): "state",
+    # link-level interconnect (core/network.py): occupancy is "net"
+    # versioned state; topology/link parameters are fixed at build
+    ("FabricNetwork", "version"): "net",
+    ("FabricNetwork", "_active"): "net",
+    ("FabricNetwork", "_pending"): "net",
+    ("FabricNetwork", "_mode"): None,
+    ("FabricNetwork", "_default"): None,
+    ("FabricNetwork", "_pairs"): None,
+    ("FabricNetwork", "_links"): None,         # membership fixed at build
+    ("FabricNetwork", "_routes"): None,
+    ("FabricNetwork", "_ports"): None,
+    ("FabricNetwork", "active"): None,
+    ("FabricNetwork", "has_ingress"): None,
+    ("FabricNetwork", "inflight"): "net",
+    ("Link", "busy_until"): "net",
+    ("Link", "inflight"): "net",
+    ("Link", "latency_ms"): None,
+    ("Link", "bw_ms"): None,
+    ("Link", "buffer"): None,
+    ("Link", "src"): None,
+    ("Link", "dst"): None,
+    ("Link", "name"): None,
+    ("Link", "busy_ms"): None,                 # reporting stats
+    ("Link", "transfers"): None,
+    ("Link", "max_queue"): None,
+    ("Transfer", "src"): None,
+    ("Transfer", "dst"): None,
+    ("Transfer", "payload"): None,
+    ("Transfer", "route"): None,
+    ("Transfer", "t_start"): "net",
+    ("Transfer", "t_done"): "net",
+    ("Transfer", "wait_ms"): "net",
+    ("Transfer", "total_ms"): "net",
 }
 
 # attribute-name fallback for receivers the typer cannot resolve (deque
@@ -193,7 +235,7 @@ REQUEST_ATTRS = frozenset({
 # equivalence
 SIM_MODULES = (
     "scheduler", "fabric", "simulator", "arrivals", "checkpoint",
-    "allocator", "slo",
+    "allocator", "slo", "network",
 )
 
 # intentional exceptions outside the sim path, (module, rule) -> why.

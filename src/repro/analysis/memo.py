@@ -44,7 +44,7 @@ CHECKER = "memo"
 
 KNOWN_TOKENS = frozenset({
     "state", "cost", "arrivals", "reserve", "now", "tenant_service",
-    "args",
+    "args", "net",
 })
 
 

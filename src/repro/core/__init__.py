@@ -19,6 +19,7 @@ from repro.core.arrivals import ArrivalEstimator
 from repro.core.checkpoint import CheckpointManager, ChunkCheckpoint
 from repro.core.daemon import Daemon, JobHandle
 from repro.core.fabric import Fabric, FabricJob
+from repro.core.network import FabricNetwork, Link, Transfer
 from repro.core.registry import FabricDescriptor, ImplAlt, \
     ModuleDescriptor, Registry
 from repro.core.scheduler import Assignment, CostModel, PolicyConfig, \

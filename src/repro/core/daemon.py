@@ -289,6 +289,16 @@ class Daemon:
                 pass
             with self._lock:
                 t0 = time.perf_counter_ns()
+                if self.fabric.network.active:
+                    # mirror the simulator's "net" release events on
+                    # wall clock: expired link occupancy frees before
+                    # the pass, so backed-off steal estimates recover
+                    now_ms = _now_ms()
+                    for xfer in self.fabric.network.advance(now_ms):
+                        if self.fabric.obs is not None:
+                            self.fabric.obs.on_transfer_complete(
+                                xfer.src, xfer.dst, now_ms)
+                    self.fabric.network.drain_releases()
                 assignments = self.fabric.schedule(now=_now_ms())
                 # the daemon keys no per-chunk executor state to stolen
                 # identities (payloads move by reference); drain the

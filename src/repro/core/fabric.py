@@ -67,6 +67,7 @@ from typing import Any, Iterable, Mapping
 from repro.analysis import sanitizer
 from repro.core.arrivals import ArrivalEstimator
 from repro.core.checkpoint import CheckpointManager
+from repro.core.network import FabricNetwork
 from repro.core.registry import parse_transfer_pair
 from repro.core.scheduler import Assignment, CostModel, PolicyConfig, \
     SchedulerState
@@ -142,7 +143,17 @@ MEMO_CONTRACTS = (
          "now": "the clock enters the gate only through the per-event "
                 "reservation sample (_reserve_last, covered) and the "
                 "demand memo, which keys on `now` itself; the drain/"
-                "price comparison reads no absolute time"}},
+                "price comparison reads no absolute time (the "
+                "load-aware transfer estimate does read `now`, but "
+                "only on an active link network, where the cache is "
+                "bypassed — see the `net` entry)",
+         "net": "link-state reads (est_transfer_ms: busy_until, "
+                "inflight) resolve to construction-time constants on "
+                "the degenerate uniform topology, and the fingerprint "
+                "cache is consulted only there — _steal bypasses it "
+                "entirely whenever `network.active` (link occupancy "
+                "moves without any shell/cost version bump, so no "
+                "4-tuple fingerprint could stay sound)"}},
 )
 
 
@@ -156,12 +167,22 @@ class Fabric:
     `(victim, thief)` pairs (or `"victim->thief"` strings) to the
     modeled cross-shell payload-movement cost per stolen chunk,
     overriding `PolicyConfig.transfer_ms` for that direction.
+
+    `network` optionally supplies a link-level `FabricNetwork`
+    (core/network.py): transfer costs then come from queue-aware
+    store-and-forward estimates over the topology instead of the
+    scalar/per-pair model, and realized steals occupy links.  Omitted,
+    the scalar knobs become a degenerate uniform topology — the
+    byte-identical compatibility shim.  A link topology and per-pair
+    `transfer` overrides are mutually exclusive (the topology already
+    prices every pair).
     """
 
     def __init__(self, shells: Mapping[str, Any], registry,
                  policy: PolicyConfig | None = None,
                  cost: CostModel | None = None,
-                 transfer: Mapping[Any, float] | None = None):
+                 transfer: Mapping[Any, float] | None = None,
+                 network: FabricNetwork | None = None):
         if not shells:
             raise ValueError("a fabric needs at least one shell")
         self.registry = registry
@@ -226,6 +247,16 @@ class Fabric:
         for key, ms in (transfer or {}).items():
             pair = parse_transfer_pair(key, self.states)
             self._transfer[pair] = float(ms)
+        if network is not None and network.active and self._transfer:
+            raise ValueError(
+                "per-pair transfer overrides and a link topology are "
+                "mutually exclusive: the topology already prices every "
+                "shell pair")
+        # the interconnect model every transfer estimate reads; absent a
+        # topology, the scalar knobs *are* the (uniform) network
+        self.network = network if network is not None else \
+            FabricNetwork.uniform(self.states, self.policy.transfer_ms,
+                                  self._transfer)
         # SLO admission control: constructed lazily by the first
         # register_contract — a fabric with no contract never screens,
         # so the no-contract path stays byte-identical (core/slo.py)
@@ -269,6 +300,10 @@ class Fabric:
         self._steal_fail: dict[tuple[str, str],
                                tuple[int, int, int, int]] = {}
         self._cost_seen = self.cost.version
+        # network occupancy version last folded into the dirty set; on
+        # the uniform shim the version never moves and the check below
+        # is a single always-equal compare
+        self._net_seen = self.network.version
         # reference switch: treat every shell as dirty on every pass
         # (the pre-refactor reschedule-everything core; equivalence
         # property tests and the throughput bench baseline drive it)
@@ -284,10 +319,13 @@ class Fabric:
                       policy: PolicyConfig | None = None) -> "Fabric":
         """Build from a registered `FabricDescriptor` (fabrics.json);
         shell speeds come from the ShellSpecs, per-pair transfer costs
-        from the descriptor."""
+        — or the link topology — from the descriptor."""
         desc = registry.fabric(name)
+        net = FabricNetwork.from_topology(desc.network, desc.shells) \
+            if desc.network else None
         return cls({s: registry.shell(s) for s in desc.shells},
-                   registry, policy, transfer=desc.transfer_ms)
+                   registry, policy, transfer=desc.transfer_ms,
+                   network=net)
 
     # -- queries --------------------------------------------------------------
 
@@ -349,9 +387,25 @@ class Fabric:
     def _min_fp(self, module: str) -> int:
         return min(self.registry.module(module).footprints)
 
-    def _transfer_ms(self, victim: str, thief: str) -> float:
-        return self._transfer.get((victim, thief),
-                                  self.policy.transfer_ms)
+    def est_transfer_ms(self, victim: str, thief: str,
+                        payload: float = 1.0,
+                        now: float | None = None,
+                        bounded: bool = True) -> float:
+        """Estimated cost of moving `payload` chunks victim->thief at
+        `now` — what every steal / migration / dispatch gate consults.
+
+        On the uniform shim this is the scalar per-pair lookup the old
+        `_transfer_ms` did, byte-identical.  On a link topology it is
+        the network's queue-aware store-and-forward walk — `inf` while
+        a bounded buffer on the route is full — unless
+        `PolicyConfig.congestion_aware` is off, which degrades to the
+        zero-load figure (the scalar model's belief on real links: the
+        baseline `benchmarks/network_contention.py` measures against).
+        """
+        return self.network.est_transfer_ms(
+            victim, thief, payload,
+            now=self._now if now is None else now,
+            loaded=self.policy.congestion_aware, bounded=bounded)
 
     def _backlog_ms(self, name: str) -> float:
         """Estimated milliseconds of work already committed to a shell:
@@ -419,7 +473,16 @@ class Fabric:
         slots = max(1, st.alloc.n
                     - st.reserve_for_class(job.priority, job.module,
                                            now=self._now))
-        return (b + self._job_ms(job, name)) / slots
+        ect = (b + self._job_ms(job, name)) / slots
+        if self.network.has_ingress:
+            # an explicit "ingress" port prices arrival payload
+            # movement: a shell behind a congested link finishes later
+            # than its queue alone suggests.  Unbounded walk — dispatch
+            # must rank shells even when every buffer is full
+            ect += self.network.est_transfer_ms(
+                "ingress", name, float(job.n_chunks), now=self._now,
+                loaded=self.policy.congestion_aware, bounded=False)
+        return ect
 
     # -- submission -----------------------------------------------------------
 
@@ -609,7 +672,7 @@ class Fabric:
         homogeneous stealing contract is exactly the PR 2 behavior.
         """
         vst, tst = self.states[victim], self.states[thief]
-        transfer = self._transfer_ms(victim, thief)
+        transfer = self.est_transfer_ms(victim, thief, now=now)
         priced = transfer > 0.0 or tst.speed != vst.speed
         # time for the victim to drain what it already has, per slot
         drain_ms = self._backlog_ms(victim) / vst.alloc.n \
@@ -725,7 +788,21 @@ class Fabric:
         job.subs.append((thief, sub.rid))
         self._subs[(thief, sub.rid)] = (
             job, {i: g for i, g in enumerate(global_ids)})
-        if transfer > 0.0:
+        if self.network.active:
+            # realize the move as timed link occupancy: a k-chunk batch
+            # serializes store-and-forward over the route, so the
+            # per-chunk realized price is the batch total split evenly
+            # — under contention it exceeds the estimate the gate saw,
+            # which is exactly the penalty the naive scalar model pays
+            xfer = self.network.reserve(victim, thief,
+                                        float(len(taken)), now)
+            if xfer.total_ms > 0.0:
+                self._sub_transfer[(thief, sub.rid)] = \
+                    xfer.total_ms / len(taken)
+            if self.obs is not None:
+                self.obs.on_transfer_start(victim, thief, len(taken),
+                                           xfer, now)
+        elif transfer > 0.0:
             self._sub_transfer[(thief, sub.rid)] = transfer
         if self.ckpt is not None:
             # a stolen chunk's checkpoint follows it to the thief (its
@@ -766,15 +843,21 @@ class Fabric:
                     # input _steal_from reads (victim queues + their
                     # checkpoint records, thief residency/allocation/
                     # reservation, cost estimates; `now` only through
-                    # the already-sampled reservation) is covered by it
-                    fp = (self.states[victim]._version, tst._version,
-                          self.cost.version, tst._reserve_last)
-                    if self._steal_fail.get((victim, thief)) == fp:
-                        if self.obs is not None:
-                            # counted as a probe+miss at snapshot time,
-                            # never traced (see FlightRecorder)
-                            self.obs.steal_fp_skips += 1
-                        continue
+                    # the already-sampled reservation) is covered by it.
+                    # On an active link network the transfer estimate
+                    # also reads link occupancy and the clock — state no
+                    # shell version covers — so the cache is bypassed
+                    # there (MEMO_CONTRACTS "net")
+                    fp = None
+                    if not self.network.active:
+                        fp = (self.states[victim]._version, tst._version,
+                              self.cost.version, tst._reserve_last)
+                        if self._steal_fail.get((victim, thief)) == fp:
+                            if self.obs is not None:
+                                # counted as a probe+miss at snapshot
+                                # time, never traced (see FlightRecorder)
+                                self.obs.steal_fp_skips += 1
+                            continue
                     taken = self._steal_from(victim, thief, now)
                     if self.obs is not None:
                         self.obs.on_steal(victim, thief, now,
@@ -785,7 +868,8 @@ class Fabric:
                         moved = True
                         ranked = None
                         break
-                    self._steal_fail[(victim, thief)] = fp
+                    if fp is not None:
+                        self._steal_fail[(victim, thief)] = fp
             if not moved:
                 return out
 
@@ -825,6 +909,13 @@ class Fabric:
             # a refined estimate moves placement and steal economics on
             # every shell at once (the model is shared)
             self._cost_seen = self.cost.version
+            run.update(self.states)
+        if self.network.version != self._net_seen:
+            # link occupancy moved (a reserve or a release): steal
+            # economics and ingress-priced dispatch changed on every
+            # shell at once, with no shell-local version bump to show
+            # for it — the network is shared, like the cost model
+            self._net_seen = self.network.version
             run.update(self.states)
         if self._admission:
             # one backlog walk for the whole drain; each dispatched

@@ -110,21 +110,58 @@ class FabricDescriptor:
     cross-shell payload-movement cost per stolen chunk, overriding the
     fabric-wide `PolicyConfig.transfer_ms` default for that direction
     (e.g. boards on different hosts cost more than same-host shells).
+
+    `network` optionally describes a link-level interconnect topology
+    (core/network.py JSON schema: switches, ports, default_link,
+    links) replacing the scalar model wholesale; it is mutually
+    exclusive with `transfer_ms`.  Both are validated *here*, at
+    construction/`from_json` time, with an error naming the offending
+    pair or topology entry — a malformed descriptor must fail at load,
+    not later at steal time.
     """
     name: str
     shells: tuple[str, ...]
     transfer_ms: dict = dataclasses.field(default_factory=dict)
     meta: dict = dataclasses.field(default_factory=dict)
+    network: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        for pair in self.transfer_ms:
+            # descriptors must stay JSON-serialisable: tuple keys would
+            # register fine but crash every later save()
+            if not isinstance(pair, str):
+                raise ValueError(
+                    f"fabric {self.name!r}: descriptor transfer_ms "
+                    f"keys must be '<victim>-><thief>' strings, got "
+                    f"{pair!r}")
+            parse_transfer_pair(pair, self.shells)
+        if self.network:
+            if self.transfer_ms:
+                raise ValueError(
+                    f"fabric {self.name!r}: 'network' topology and "
+                    f"per-pair 'transfer_ms' are mutually exclusive — "
+                    f"the topology already prices every shell pair")
+            from repro.core.network import validate_topology
+            try:
+                validate_topology(self.network, self.shells)
+            except ValueError as e:
+                raise ValueError(
+                    f"fabric {self.name!r}: invalid network "
+                    f"topology: {e}") from e
 
     def to_json(self):
-        return {"name": self.name, "shells": list(self.shells),
-                "transfer_ms": self.transfer_ms, "meta": self.meta}
+        d = {"name": self.name, "shells": list(self.shells),
+             "transfer_ms": self.transfer_ms, "meta": self.meta}
+        if self.network:
+            d["network"] = self.network
+        return d
 
     @staticmethod
     def from_json(d):
         return FabricDescriptor(d["name"], tuple(d["shells"]),
                                 d.get("transfer_ms", {}),
-                                d.get("meta", {}))
+                                d.get("meta", {}),
+                                d.get("network", {}))
 
 
 class Registry:
@@ -144,16 +181,11 @@ class Registry:
         self.modules[desc.name] = desc
 
     def register_fabric(self, desc: FabricDescriptor) -> None:
+        # transfer pairs and the network topology were already validated
+        # at descriptor construction (FabricDescriptor.__post_init__);
+        # the registry only adds the shell-existence check
         for s in desc.shells:
             self.shell(s)              # fail fast on unknown shell names
-        for pair in desc.transfer_ms:
-            # descriptors must stay JSON-serialisable: tuple keys would
-            # register fine but crash every later save()
-            if not isinstance(pair, str):
-                raise ValueError(
-                    f"descriptor transfer_ms keys must be "
-                    f"'<victim>-><thief>' strings, got {pair!r}")
-            parse_transfer_pair(pair, desc.shells)
         self.fabrics[desc.name] = desc
 
     def module(self, name: str) -> ModuleDescriptor:

@@ -163,8 +163,17 @@ class PolicyConfig:
     refine_alpha: float = 0.3             # weight of the newest observation
     # -- fabric heterogeneity (core/fabric.py) ---------------------------
     # modeled cross-shell payload-movement cost per stolen chunk; a
-    # Fabric / FabricDescriptor may override it per (victim, thief) pair
+    # Fabric / FabricDescriptor may override it per (victim, thief)
+    # pair, or replace the scalar model wholesale with a link-level
+    # FabricNetwork topology (core/network.py)
     transfer_ms: float = 0.0
+    # on a link topology, steal/migration/dispatch gates consult
+    # queue-aware transfer estimates (current link occupancy, bounded
+    # buffers -> inf when full).  False degrades every estimate to the
+    # zero-load figure — the scalar model's belief replayed on real
+    # links, the baseline benchmarks/network_contention.py gates
+    # against.  Inert on the uniform (scalar) shim
+    congestion_aware: bool = True
     # inform placement and steal economics with true per-shell speeds;
     # False treats every shell as speed 1.0 for *decisions* (the
     # benchmark's speed-blind baseline — true service times still apply)

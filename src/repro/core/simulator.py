@@ -246,6 +246,14 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
         nonlocal seq, busy_time, wasted_time, reconfs
         nonlocal discarded_ms, reclaimed_ms
         new = fabric.schedule(now=t0)
+        if fabric.network.active:
+            # a steal this pass reserved link occupancy: realize the
+            # release as a timed "net" event, so queued thieves
+            # re-evaluate (network.version re-dirties every shell) the
+            # moment the route frees up — not one event later
+            for xfer in fabric.network.drain_releases():
+                heapq.heappush(events, (xfer.t_done, seq, "net", None))
+                seq += 1
         for ck in fabric.drain_moved():
             # a steal retires the chunk's (shell, rid, chunk) identity:
             # release its transfer-charge record so a transfer-paid
@@ -350,6 +358,13 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
             while events and events[0][0] == now \
                     and events[0][2] == "arrive":
                 admit(heapq.heappop(events)[3], now)
+        elif kind == "net":
+            # link-release instant: free the expired occupancy, then
+            # fall through to dispatch — backed-off steals re-run now
+            for xfer in fabric.network.advance(now):
+                if fabric.obs is not None:
+                    fabric.obs.on_transfer_complete(xfer.src, xfer.dst,
+                                                    now)
         else:
             shell, a = obj
             if a.aid in stale:
@@ -405,6 +420,8 @@ def simulate(registry: Registry, fabric_or_n_slots, jobs: Iterable[SimJob],
     assert not starts and not charged and not stale \
         and not paid_chunks, \
         "simulator finished with leaked bookkeeping entries"
+    assert fabric.network.inflight == 0, \
+        "simulator finished with unreleased link occupancy"
     lat = {j.gid: j.t_finish - j.t_submit
            for j in fabric.jobs.values() if not j.rejected}
     util = busy_time / (now * total_slots) if now > 0 else 0.0

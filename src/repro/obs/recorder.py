@@ -44,6 +44,10 @@ COUNTER_NAMES = (
     "steal_probes", "steal_hits", "steal_misses", "stolen_chunks",
     "ckpt_saves", "ckpt_migrations",
     "reconfigs", "reserve_resizes",
+    # link-network transfers (zero on the uniform scalar shim):
+    #   transfers_started    == transfers_completed (at rest)
+    #   transfers_queued     <= transfers_started
+    "transfers_started", "transfers_completed", "transfers_queued",
 )
 
 PROF_KEYS = (
@@ -272,6 +276,33 @@ class FlightRecorder:
             self.tracer.emit(now, tr.CKPT_MIGRATE, shell=thief, rid=rid,
                              data={"victim": victim, "thief": thief})
 
+    def on_transfer_start(self, victim: str, thief: str, chunks: int,
+                          xfer, now: float) -> None:
+        """A steal reserved link occupancy (`xfer` is the
+        `core.network.Transfer` receipt); only fires on an active link
+        network — the uniform shim realizes no transfers."""
+        c = self.counts
+        c["transfers_started"] += 1
+        queued = xfer.wait_ms > 0.0
+        if queued:
+            c["transfers_queued"] += 1
+        if self.tracer is not None:
+            if queued:
+                self.tracer.emit(now, tr.TRANSFER_QUEUED, shell=thief,
+                                 data={"victim": victim, "thief": thief,
+                                       "wait_ms": xfer.wait_ms})
+            self.tracer.emit(now, tr.TRANSFER_START, shell=thief,
+                             data={"victim": victim, "thief": thief,
+                                   "chunks": chunks,
+                                   "transfer_ms": xfer.total_ms})
+
+    def on_transfer_complete(self, victim: str, thief: str,
+                             now: float) -> None:
+        self.counts["transfers_completed"] += 1
+        if self.tracer is not None:
+            self.tracer.emit(now, tr.TRANSFER_COMPLETE, shell=thief,
+                             data={"victim": victim, "thief": thief})
+
     def on_reserve(self, shell: str, now: float, slots: int) -> None:
         self.counts["reserve_resizes"] += 1
         if self.tracer is not None:
@@ -301,10 +332,16 @@ class FlightRecorder:
                 total += st.alloc.n
                 pend += st.pending_chunks()
                 reserve += st._reserve_last
-        return {"occupancy": busy / total if total else 0.0,
-                "pending_chunks": pend,
-                "effective_reserve": reserve,
-                "counters": self._counters()}
+        row = {"occupancy": busy / total if total else 0.0,
+               "pending_chunks": pend,
+               "effective_reserve": reserve,
+               "counters": self._counters()}
+        if fab is not None and fab.network.active:
+            # link-utilisation gauges (count-based, no clock needed);
+            # keys only exist on link-network runs so uniform-shim
+            # sample rows stay byte-identical to PR 9
+            row.update(fab.network.gauges())
+        return row
 
     def snapshot(self) -> dict:
         """JSON-able metrics dict: the `SimResult.metrics` /
@@ -337,4 +374,9 @@ class FlightRecorder:
                 out["ckpt"] = dict(fab.ckpt.stats)
             if fab.slo is not None:
                 out["admission"] = fab.slo.totals()
+            if fab.network.active:
+                # per-link lifetime stats (transfers, busy_ms,
+                # max_queue), keyed "src->dst"; absent on the uniform
+                # shim so pre-network snapshots are unchanged
+                out["network"] = fab.network.stats()
         return out

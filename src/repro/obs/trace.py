@@ -44,11 +44,21 @@ RECONFIG = "reconfig"
 RESERVE = "reserve"
 # one Fabric.schedule pass (data: visited shells, n_visited, n_elided)
 SCHED_PASS = "sched_pass"
+# realized cross-shell transfer reserved link occupancy (data: victim/
+# thief, chunks, transfer_ms; only on an active link network)
+TRANSFER_START = "transfer_start"
+# the transfer queued behind earlier traffic before its first link
+# accepted it (data adds wait_ms; emitted beside its transfer_start)
+TRANSFER_QUEUED = "transfer_queued"
+# the transfer's link occupancy released (sim: "net" heap event;
+# daemon: wall-clock advance)
+TRANSFER_COMPLETE = "transfer_complete"
 
 KINDS = (
     SUBMIT, DISPATCH, CHUNK_START, CHUNK_COMPLETE, PREEMPT,
     STEAL_HIT, STEAL_MISS, CKPT_SAVE, CKPT_RESTORE, CKPT_MIGRATE,
     RECONFIG, RESERVE, SCHED_PASS,
+    TRANSFER_START, TRANSFER_QUEUED, TRANSFER_COMPLETE,
 )
 
 

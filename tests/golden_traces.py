@@ -28,8 +28,8 @@ import json
 import pathlib
 import random
 
-from repro.core import Fabric, ImplAlt, ModuleDescriptor, PolicyConfig, \
-    Registry, SimJob, simulate, uniform_shell
+from repro.core import Fabric, FabricNetwork, ImplAlt, ModuleDescriptor, \
+    PolicyConfig, Registry, SimJob, simulate, uniform_shell
 
 FIXTURE_DIR = pathlib.Path(__file__).parent / "fixtures"
 
@@ -183,6 +183,34 @@ def trace_contracts_full():
     return reg, fab, _jittered_jobs(606, 48, 5.0, mix)
 
 
+def trace_congested_two_switch():
+    """Link-level interconnect (PR 10): a two-switch topology with a
+    thin trunk between them.  Heavy batch work is pinned to the east
+    shell, so the two west shells steal across the shared trunk —
+    concurrent transfers serialize and queue there (bounded buffer),
+    steal gating reads load-aware estimates, and preemption +
+    checkpointed migration run over the same priced routes."""
+    reg = build_registry()
+    pol = PolicyConfig(preemptive=True, ckpt=True,
+                       reserve_mode="adaptive", reserve_slots_max=1)
+    topo = {
+        "switches": ["sw0", "sw1"],
+        "ports": {"east": "sw0", "west0": "sw1", "west1": "sw1"},
+        "default_link": {"latency_ms": 0.3, "bw_ms": 0.2, "buffer": 3},
+        "links": [{"src": "sw0", "dst": "sw1",
+                   "latency_ms": 0.8, "bw_ms": 1.2, "buffer": 2}],
+    }
+    net = FabricNetwork.from_topology(topo, ("east", "west0", "west1"))
+    fab = Fabric({"east": (4, 1.0), "west0": (2, 1.4),
+                  "west1": (2, 0.9)}, reg, pol, network=net)
+    mix = [("acme", "batch", 6, 0, None, "east"),
+           ("acme", "batch", 5, 0, None, "east"),
+           ("beta", "inter", 2, 2, 30.0, "east"),
+           ("beta", "inter", 1, 3, 15.0, "east"),
+           ("gama", "batch", 4, 0, 500.0, None)]
+    return reg, fab, _jittered_jobs(620, 40, 8.0, mix)
+
+
 TRACES = {
     "hetero_steal_ckpt": trace_hetero_steal_ckpt,
     "refine_hetero": trace_refine_hetero,
@@ -190,6 +218,7 @@ TRACES = {
     "single_shell_seed": trace_single_shell_seed,
     "ckpt_incapable_mix": trace_ckpt_incapable_mix,
     "contracts_full": trace_contracts_full,
+    "congested_two_switch": trace_congested_two_switch,
 }
 
 

@@ -429,8 +429,8 @@ def test_per_pair_transfer_override():
     fab = Fabric({"a": 1, "b": 1}, _registry(),
                  PolicyConfig(transfer_ms=3.0),
                  transfer={"a->b": 7.0})
-    assert fab._transfer_ms("a", "b") == 7.0
-    assert fab._transfer_ms("b", "a") == 3.0     # policy default
+    assert fab.est_transfer_ms("a", "b") == 7.0
+    assert fab.est_transfer_ms("b", "a") == 3.0  # policy default
     with pytest.raises(ValueError, match="transfer pair"):
         Fabric({"a": 1}, _registry(), transfer={"a->ghost": 1.0})
 
@@ -441,7 +441,7 @@ def test_hetero_fabric_from_registry():
     reg = default_registry()
     fab = Fabric.from_registry(reg, "hostpair_hetero")
     assert fab.speeds == {"host8_s4": 1.0, "host8_s4_lowclk": 0.5}
-    assert fab._transfer_ms("host8_s4", "host8_s4_lowclk") == 2.0
+    assert fab.est_transfer_ms("host8_s4", "host8_s4_lowclk") == 2.0
     with pytest.raises(ValueError, match="transfer pair"):
         reg.register_fabric(FabricDescriptor(
             "bad", ("host8_s4",), transfer_ms={"host8_s4->ghost": 1.0}))

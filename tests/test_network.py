@@ -1,0 +1,275 @@
+"""Link-level fabric network model (PR 10, core/network.py).
+
+Three contracts under test:
+
+1. the **link model itself** — deterministic store-and-forward
+   estimates, serialization and bounded-buffer queuing on shared links,
+   reserve/advance occupancy lifecycle;
+2. the **compatibility shim** — a `Fabric` built with the scalar
+   `transfer_ms`/per-pair knobs and one built with the equivalent
+   explicit `FabricNetwork.uniform` produce byte-identical `SimResult`s
+   across every field (hypothesis property);
+3. the **descriptor surface** — topology JSON and `transfer_ms` keys
+   are validated at `FabricDescriptor` construction/`from_json` load
+   time with rich errors naming the offending pair, never later at
+   steal time.
+"""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from golden_traces import build_registry, _jittered_jobs, run_trace, \
+    to_jsonable
+from repro.core import Fabric, FabricDescriptor, FabricNetwork, \
+    PolicyConfig, Registry, default_registry, simulate
+from repro.obs import FlightRecorder
+
+INF = float("inf")
+
+
+def _two_switch(buffer=2, trunk_lat=1.0, trunk_bw=2.0):
+    return FabricNetwork.from_topology({
+        "switches": ["sw0", "sw1"],
+        "ports": {"a": "sw0", "b": "sw1", "c": "sw1"},
+        "default_link": {"latency_ms": 0.5, "bw_ms": 0.25, "buffer": 4},
+        "links": [{"src": "sw0", "dst": "sw1", "latency_ms": trunk_lat,
+                   "bw_ms": trunk_bw, "buffer": buffer}],
+    }, ("a", "b", "c"))
+
+
+# -- 1. link model ------------------------------------------------------------
+
+def test_crossbar_zero_load_estimate():
+    net = FabricNetwork.crossbar(("a", "b"), latency_ms=0.5,
+                                 bw_ms=0.25, buffer=4)
+    assert net.active
+    # a->xbar + xbar->b, each latency + payload*bw
+    assert net.est_transfer_ms("a", "b", 1.0, now=0.0) == \
+        2 * (0.5 + 0.25)
+    assert net.est_transfer_ms("a", "b", 4.0, now=0.0) == \
+        2 * (0.5 + 4.0 * 0.25)
+    assert net.est_transfer_ms("a", "a", 9.0, now=0.0) == 0.0
+
+
+def test_shared_link_serializes_and_queues():
+    net = _two_switch()
+    # zero-load a->b: up(0.5+0.25) + trunk(1+2) + down(0.5+0.25) = 4.5
+    free = net.est_transfer_ms("a", "b", 1.0, now=0.0)
+    assert free == 4.5
+    tr = net.reserve("a", "b", 1.0, now=0.0)
+    assert tr.wait_ms == 0.0 and tr.total_ms == 4.5 and tr.t_done == 4.5
+    # a second transfer queues behind the first on every shared link:
+    # strictly slower than the free figure, and the estimate says so
+    est2 = net.est_transfer_ms("a", "c", 1.0, now=0.0)
+    assert est2 > free
+    tr2 = net.reserve("a", "c", 1.0, now=0.0)
+    assert tr2.total_ms == est2        # estimate == realized when taken
+    assert tr2.wait_ms > 0.0           # blocked behind tr on a->sw0
+    # the unloaded walk still reports the scalar-model belief
+    assert net.est_transfer_ms("a", "c", 1.0, now=0.0,
+                               loaded=False) == free
+
+
+def test_bounded_buffer_backpressure_and_release():
+    net = _two_switch(buffer=2)
+    net.reserve("a", "b", 1.0, now=0.0)
+    net.reserve("a", "c", 1.0, now=0.0)
+    # trunk buffer (2) is full: bounded estimates refuse with inf...
+    assert net.est_transfer_ms("a", "b", 1.0, now=0.0) == INF
+    # ...but the unbounded walk (ECT dispatch) still ranks routes
+    assert net.est_transfer_ms("a", "b", 1.0, now=0.0,
+                               bounded=False) < INF
+    v = net.version
+    done = net.advance(100.0)          # both transfers long done
+    assert [t.dst for t in done] == ["b", "c"]
+    assert net.version > v and net.inflight == 0
+    # capacity freed: estimates recover to the zero-load figure
+    assert net.est_transfer_ms("a", "b", 1.0, now=100.0) == 4.5
+    assert net.advance(200.0) == []    # idempotent once drained
+
+
+def test_drain_releases_and_stats():
+    net = _two_switch()
+    t1 = net.reserve("a", "b", 2.0, now=1.0)
+    assert net.drain_releases() == [t1]
+    assert net.drain_releases() == []  # one-shot drain
+    stats = net.stats()
+    assert stats["sw0->sw1"]["transfers"] == 1
+    assert stats["sw0->sw1"]["busy_ms"] > 0
+    assert net.gauges() == {"links_busy": 3, "transfers_inflight": 1}
+
+
+def test_uniform_shim_is_the_scalar_lookup():
+    net = FabricNetwork.uniform(("a", "b"), 3.0, {("a", "b"): 7.0})
+    assert not net.active and net.version == 0
+    assert net.est_transfer_ms("a", "b", 99.0, now=123.0) == 7.0
+    assert net.est_transfer_ms("b", "a", 99.0, now=123.0) == 3.0
+    net.reserve("a", "b", 1.0, now=0.0)
+    assert net.version == 0 and net.inflight == 0   # stateless
+
+
+def test_network_determinism():
+    """Same topology, same reserve sequence -> identical floats."""
+    def run():
+        net = _two_switch()
+        out = []
+        for i in range(6):
+            out.append(net.reserve("a", "b" if i % 2 else "c",
+                                   float(i + 1), now=float(i)).total_ms)
+        out.extend(t.t_done for t in net.advance(50.0))
+        return out
+    assert run() == run()
+
+
+# -- 2. topology validation at load time --------------------------------------
+
+def test_topology_validation_errors():
+    shells = ("a", "b")
+    base = {"switches": ["sw"], "ports": {"a": "sw", "b": "sw"}}
+    with pytest.raises(ValueError, match="no port"):
+        FabricNetwork.from_topology(
+            {"switches": ["sw"], "ports": {"a": "sw"}}, shells)
+    with pytest.raises(ValueError, match="unknown switch 'ghost'"):
+        FabricNetwork.from_topology(
+            {"switches": ["sw"], "ports": {"a": "sw", "b": "ghost"}},
+            shells)
+    with pytest.raises(ValueError, match="unknown keys"):
+        FabricNetwork.from_topology(dict(base, extra=1), shells)
+    with pytest.raises(ValueError, match="'ghost'->'sw'"):
+        FabricNetwork.from_topology(
+            dict(base, links=[{"src": "ghost", "dst": "sw"}]), shells)
+    with pytest.raises(ValueError, match="buffer must be an int >= 1"):
+        FabricNetwork.from_topology(
+            dict(base, default_link={"buffer": 0}), shells)
+    with pytest.raises(ValueError, match="latency_ms must be"):
+        FabricNetwork.from_topology(
+            dict(base, links=[{"src": "a", "dst": "sw",
+                               "latency_ms": -1}]), shells)
+    # two switches with no trunk between them: unreachable at build
+    with pytest.raises(ValueError, match="no switch path"):
+        FabricNetwork.from_topology(
+            {"switches": ["sw0", "sw1"],
+             "ports": {"a": "sw0", "b": "sw1"}}, shells)
+
+
+def test_descriptor_validates_at_load_time():
+    """Satellite: malformed descriptor keys fail at from_json with a
+    rich error naming the offending pair — not later at steal time."""
+    with pytest.raises(ValueError, match="transfer pair 'a->ghost'"):
+        FabricDescriptor.from_json(
+            {"name": "f", "shells": ["a", "b"],
+             "transfer_ms": {"a->ghost": 1.0}})
+    with pytest.raises(ValueError, match="strings"):
+        FabricDescriptor("f", ("a", "b"),
+                         transfer_ms={("a", "b"): 1.0})
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        FabricDescriptor.from_json(
+            {"name": "f", "shells": ["a"],
+             "transfer_ms": {"a->a": 0.0},
+             "network": {"switches": ["sw"], "ports": {"a": "sw"}}})
+    with pytest.raises(ValueError, match="fabric 'f'.*unknown switch"):
+        FabricDescriptor.from_json(
+            {"name": "f", "shells": ["a"],
+             "network": {"switches": ["sw"], "ports": {"a": "nope"}}})
+
+
+def test_descriptor_network_roundtrip_and_from_registry(tmp_path):
+    topo = {"switches": ["sw"], "ports": {"a": "sw", "b": "sw"},
+            "default_link": {"latency_ms": 0.5, "bw_ms": 0.1,
+                             "buffer": 2}}
+    reg = default_registry()
+    from repro.core import uniform_shell
+    reg.register_shell(uniform_shell("a", (2, 2), 2))
+    reg.register_shell(uniform_shell("b", (2, 2), 2))
+    reg.register_fabric(FabricDescriptor("linked", ("a", "b"),
+                                         network=topo))
+    reg.save(tmp_path)
+    reg2 = Registry.load(tmp_path)
+    assert reg2.fabric("linked").network == topo
+    fab = Fabric.from_registry(reg2, "linked")
+    assert fab.network.active
+    assert fab.est_transfer_ms("a", "b") == pytest.approx(2 * (0.5 + 0.1))
+    # a descriptor without a topology still loads shim fabrics
+    assert not Fabric.from_registry(
+        reg2, "hostpair_hetero").network.active
+
+
+def test_fabric_rejects_topology_plus_pair_overrides():
+    reg = build_registry()
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        Fabric({"a": 2, "b": 2}, reg,
+               network=FabricNetwork.crossbar(("a", "b")),
+               transfer={"a->b": 1.0})
+
+
+# -- 3. the compatibility shim, byte for byte ---------------------------------
+
+MIX = [("u0", "batch", 4, 0, None, None),
+       ("u1", "inter", 2, 2, 25.0, None),
+       ("u2", "batch", 6, 0, None, None),
+       ("u1", "inter", 1, 3, 12.0, None)]
+
+
+@given(st.integers(0, 10**6), st.floats(0.0, 4.0), st.floats(0.0, 9.0),
+       st.floats(0.0, 9.0), st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_uniform_network_matches_scalar_byte_for_byte(
+        seed, default_ms, ab, ba, ckpt):
+    """Property: spelling the scalar model as an explicit uniform
+    FabricNetwork changes nothing — every SimResult field identical."""
+    jobs = _jittered_jobs(seed, 18, 7.0, MIX)
+    pol = PolicyConfig(preemptive=True, ckpt=ckpt,
+                       transfer_ms=default_ms)
+    shells = {"a": (4, 1.0), "b": (2, 1.5)}
+    reg1 = build_registry()
+    scalar = simulate(reg1, Fabric(shells, reg1, pol,
+                                   transfer={("a", "b"): ab,
+                                             ("b", "a"): ba}), jobs)
+    reg2 = build_registry()
+    net = FabricNetwork.uniform(("a", "b"), default_ms,
+                                {("a", "b"): ab, ("b", "a"): ba})
+    explicit = simulate(reg2, Fabric(shells, reg2, pol, network=net),
+                        jobs)
+    assert to_jsonable(scalar) == to_jsonable(explicit)
+
+
+# -- 4. the congested golden trace, instrumented ------------------------------
+
+def test_congested_trace_transfer_observability():
+    """The seventh golden trace realizes transfers on the trunk: starts
+    and completes conserve, at least one queued behind earlier traffic,
+    and the snapshot carries per-link stats."""
+    rec = FlightRecorder()
+    res = run_trace("congested_two_switch", obs=rec)
+    snap = rec.snapshot()
+    c = snap["counters"]
+    assert c["transfers_started"] == c["transfers_completed"] > 0
+    assert c["transfers_queued"] > 0
+    assert c["transfers_started"] == c["steal_hits"]
+    assert snap["network"]["sw0->sw1"]["transfers"] > 0
+    assert snap["network"]["sw0->sw1"]["max_queue"] >= 2
+    kinds = {e.kind for e in rec.tracer.events}
+    assert {"transfer_start", "transfer_queued",
+            "transfer_complete"} <= kinds
+    assert res.stolen_chunks > 0 and res.ckpt_migrations > 0
+
+
+def test_congestion_aware_gate_backs_off():
+    """With the knob off, steal gating believes the zero-load figure:
+    on a congested trunk the naive run reserves at least as many
+    transfers, and realized per-chunk costs exceed its own belief."""
+    def run(aware):
+        reg = build_registry()
+        pol = PolicyConfig(preemptive=True, congestion_aware=aware)
+        net = _two_switch(buffer=2, trunk_lat=1.0, trunk_bw=8.0)
+        fab = Fabric({"a": (4, 1.0), "b": (1, 1.0), "c": (1, 1.0)},
+                     reg, pol, network=net)
+        rec = FlightRecorder(trace=False).attach(fab)
+        mix = [("t", "batch", 6, 0, None, "a")]
+        simulate(reg, fab, _jittered_jobs(77, 14, 4.0, mix))
+        return rec.snapshot()["counters"]
+    naive, aware = run(False), run(True)
+    assert naive["transfers_started"] >= aware["transfers_started"]
+    assert naive["transfers_queued"] >= aware["transfers_queued"]

@@ -73,6 +73,12 @@ def test_golden_traces_have_feature_coverage():
                for e in slo.values())
     assert res["contracts_full"].stolen_chunks > 0
     assert res["contracts_full"].ckpt_saves > 0
+    # the interconnect trace must steal across the congested trunk AND
+    # migrate checkpoints over it (transfer queuing itself is asserted
+    # with a recorder attached, in test_network.py)
+    assert res["congested_two_switch"].stolen_chunks > 10
+    assert res["congested_two_switch"].ckpt_migrations > 0
+    assert res["congested_two_switch"].preemptions > 0
 
 
 # -- 2. old-vs-new equivalence ------------------------------------------------
